@@ -1,0 +1,120 @@
+"""Shared harness for the paper-table benchmarks.
+
+Scaled-down synthetic CTR setting (DESIGN.md §8): the absolute AUCs differ
+from the paper (real Criteo/Avazu aren't in the container) but the
+*comparisons* — method orderings, compression ratios at matched accuracy,
+retraining deltas, transferability — are the reproduction targets.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import get_compressor
+from repro.core.mpe import MPEConfig
+from repro.core.pipeline import run_mpe_pipeline
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.embeddings.table import FieldSpec
+from repro.models.dlrm import DLRMConfig
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+from repro.zoo import dlrm_builder
+
+FIELD_VOCABS = (3000, 2000, 1500, 1000, 800, 700)
+BATCH = 2048
+STEPS = 150
+LAM = 3e-5
+SEED = 1
+
+_CACHE: dict = {}
+
+
+def dataset() -> SyntheticCTR:
+    if "ds" not in _CACHE:
+        _CACHE["ds"] = SyntheticCTR(CTRSpec(field_vocabs=FIELD_VOCABS,
+                                            batch_size=BATCH, seed=0))
+    return _CACHE["ds"]
+
+
+def fields():
+    return tuple(FieldSpec(f"f{i}", v) for i, v in enumerate(FIELD_VOCABS))
+
+
+def builder(backbone: str = "dnn", lam: float = LAM):
+    ds = dataset()
+    key = (backbone, lam)
+    if key not in _CACHE:
+        base = DLRMConfig(fields=fields(), d_embed=16, mlp_hidden=(64, 32),
+                          backbone=backbone)
+        _CACHE[key] = dlrm_builder(base, ds.expected_frequencies(), lam=lam,
+                                   eval_batches=ds.eval_set(4))
+    return _CACHE[key]
+
+
+METHOD_CFGS = {
+    "backbone": ("plain", {}),
+    "qr": ("qr", {"k": 2}),
+    "pep": ("pep", {}),
+    "optfs": ("optfs", {"total_steps": STEPS}),
+    "alpt": ("alpt", {"bits": 8}),
+    "lsq": ("lsq", {"bits": 6}),
+}
+
+
+def run_baseline(backbone: str, method: str, *, steps: int = STEPS,
+                 lam_override: float | None = None, comp_cfg_override=None):
+    """Train a non-MPE method; returns dict(auc, logloss, ratio, seconds)."""
+    name, comp_cfg = METHOD_CFGS[method]
+    if comp_cfg_override is not None:
+        comp_cfg = comp_cfg_override
+    lam = lam_override if lam_override is not None else \
+        (1e-4 if method in ("pep", "optfs") else 0.0)
+    build = builder(backbone, lam=lam)
+    bundle = build(jax.random.PRNGKey(SEED), name, comp_cfg)
+    comp = get_compressor(name)
+    ds = dataset()
+
+    post = None
+    if method == "alpt":
+        holder = {"k": jax.random.PRNGKey(SEED + 1)}
+
+        def post(params):
+            holder["k"], sub = jax.random.split(holder["k"])
+            emb = comp.post_update(params["embedding"], {}, comp_cfg, sub)
+            return dict(params, embedding=emb)
+
+    t0 = time.time()
+    tr = Trainer(bundle["loss_fn"], bundle["params"], bundle["buffers"],
+                 bundle["state"], adam(1e-3), post_update=post)
+    tr.run(lambda s: ds.batch(s), steps, log_every=0)
+    ev = bundle["eval_fn"](tr.params, bundle["buffers"], tr.state)
+    ratio = comp.storage_ratio(tr.params["embedding"],
+                               bundle["buffers"]["embedding"], comp_cfg)
+    return {"auc": ev["auc"], "logloss": ev["logloss"], "ratio": ratio,
+            "seconds": time.time() - t0}
+
+
+def run_mpe(backbone: str, *, lam: float = LAM, steps: int = STEPS,
+            retrain_mode: str = "mpe", return_result: bool = False):
+    build = builder(backbone, lam=lam)
+    ds = dataset()
+    t0 = time.time()
+    res = run_mpe_pipeline(
+        build, lambda s: ds.batch(s), key=jax.random.PRNGKey(SEED),
+        mpe_cfg=MPEConfig(lam=lam), optimizer=adam(1e-3), search_steps=steps,
+        retrain_steps=(0 if retrain_mode == "none" else steps),
+        retrain_mode=retrain_mode,
+        eval_fn=build(jax.random.PRNGKey(SEED), "plain", {})["eval_fn"],
+        log_fn=lambda *a: None)
+    out = {"auc": res["eval"]["auc"], "logloss": res["eval"]["logloss"],
+           "ratio": res["storage_ratio"], "avg_bits": res["avg_bits"],
+           "seconds": time.time() - t0}
+    return (out, res) if return_result else out
+
+
+def print_csv(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,32 @@
+"""Paper Figure 3: AUC under varying compression ratios (DNN model).
+
+MPE sweeps λ; LSQ+ sweeps the uniform bit-width; QR sweeps k. At matched
+ratio MPE should dominate the AUC frontier.
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, run_baseline, run_mpe
+
+
+def main():
+    rows = []
+    for lam in (1e-5, 3e-5, 1e-4, 3e-4):
+        r = run_mpe("dnn", lam=lam)
+        rows.append([f"fig3/mpe/lam={lam:g}", round(r["seconds"] * 1e6),
+                     f"ratio={r['ratio']:.4f} auc={r['auc']:.4f}"])
+        print(rows[-1])
+    for bits in (2, 3, 4, 6):
+        r = run_baseline("dnn", "lsq", comp_cfg_override={"bits": bits})
+        rows.append([f"fig3/lsq/b={bits}", round(r["seconds"] * 1e6),
+                     f"ratio={r['ratio']:.4f} auc={r['auc']:.4f}"])
+        print(rows[-1])
+    for k in (2, 4):
+        r = run_baseline("dnn", "qr", comp_cfg_override={"k": k})
+        rows.append([f"fig3/qr/k={k}", round(r["seconds"] * 1e6),
+                     f"ratio={r['ratio']:.4f} auc={r['auc']:.4f}"])
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(main(), ["name", "us_per_call", "derived"])

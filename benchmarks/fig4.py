@@ -1,0 +1,58 @@
+"""Paper Figure 4: transferability — bit-widths searched on a source model,
+retrained on a target model (reusing overlapping interaction-net params).
+
+Claim: the transfer penalty is small compared to skipping retraining.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (LAM, SEED, STEPS, builder, dataset, print_csv,
+                               run_mpe)
+from repro.core.mpe import MPEConfig
+from repro.core.sampling import MPERetrainEmbedding
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+
+
+def transfer(source_res, target_backbone: str):
+    """Retrain `target_backbone` with the bit-widths searched on the source."""
+    ds = dataset()
+    build = builder(target_backbone, lam=LAM)
+    bundle = build(jax.random.PRNGKey(SEED), "mpe_retrain", {
+        **MPEConfig(lam=LAM)._asdict(),
+        "init_emb": jnp.asarray(source_res["final_params"]["embedding"]["emb"]),
+        "alpha": jnp.asarray(source_res["final_params"]["embedding"]["alpha"]),
+        "beta": jnp.asarray(source_res["final_params"]["embedding"]["beta"]),
+        "bits_idx": jnp.asarray(source_res["feature_bits_idx"]),
+    })
+    tr = Trainer(bundle["loss_fn"], bundle["params"], bundle["buffers"],
+                 bundle["state"], adam(1e-3))
+    tr.run(lambda s: ds.batch(s), STEPS, log_every=0)
+    return bundle["eval_fn"](tr.params, bundle["buffers"], tr.state)
+
+
+def main():
+    rows = []
+    sources = {}
+    for src in ("dnn", "dcn"):
+        out, res = run_mpe(src, return_result=True)
+        sources[src] = res
+        rows.append([f"fig4/src={src}/tgt={src}", round(out["seconds"] * 1e6),
+                     f"auc={out['auc']:.4f} ratio={out['ratio']:.4f}"])
+        print(rows[-1])
+    for src in ("dnn", "dcn"):
+        for tgt in ("dnn", "dcn"):
+            if src == tgt:
+                continue
+            ev = transfer(sources[src], tgt)
+            rows.append([f"fig4/src={src}/tgt={tgt}", 0,
+                         f"auc={ev['auc']:.4f}"])
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(main(), ["name", "us_per_call", "derived"])

@@ -1,0 +1,84 @@
+"""Paper Figure 5: inference latency split into table lookup vs computation.
+
+Methods: backbone (fp32 table), LSQ+ (uniform packed int6 emulated via the
+packed table with a single width), MPE (mixed packed). The paper's finding —
+lookup is a small slice of end-to-end latency, dequantization costs a little
+— is measured here wall-clock on CPU; on TPU the same harness reads traces.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (LAM, SEED, builder, dataset, fields, print_csv,
+                               run_mpe)
+from repro.core.inference import packed_lookup
+from repro.models.dlrm import DLRM, DLRMConfig
+
+BATCH = 10_000  # paper §5.5
+
+
+def _time(fn, *args, reps=15):
+    fn(*args)  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def main():
+    ds = dataset()
+    out, res = run_mpe("dnn", return_result=True)
+    ids = jnp.asarray(ds.batch(99)["ids"])
+
+    base_cfg = builder("dnn")(jax.random.PRNGKey(SEED), "plain", {})["cfg"]
+    n = res["packed_meta"]["n"]
+
+    # --- fp32 backbone
+    bundle = builder("dnn")(jax.random.PRNGKey(SEED), "plain", {})
+    params, bufs, state = bundle["params"], bundle["buffers"], bundle["state"]
+    gids = ids + bufs["offsets"][None, :]
+
+    lookup_fp = jax.jit(lambda p, i: jnp.take(p["embedding"]["emb"], i, axis=0))
+    full_fp = jax.jit(lambda p, i: DLRM.apply(p, bufs, state, {"ids": i},
+                                              base_cfg, train=False)[0])
+    t_lookup_fp = _time(lookup_fp, params, gids)
+    t_full_fp = _time(full_fp, params, ids)
+
+    # --- MPE packed
+    table, meta = res["packed_table"], res["packed_meta"]
+    lookup_mpe = jax.jit(lambda t, i: packed_lookup(t, meta, i))
+    t_lookup_mpe = _time(lookup_mpe, table, gids)
+
+    serve_cfg = base_cfg._replace(compressor="packed",
+                                  comp_cfg={"bits": meta["bits"],
+                                            "d": meta["d"], "n": meta["n"]})
+    sp = {k: v for k, v in res["final_params"].items() if k != "embedding"}
+    sp["embedding"] = table
+    sbufs = dict(res["buffers"], embedding={})
+    full_mpe = jax.jit(lambda p, i: DLRM.apply(p, sbufs, res["state"],
+                                               {"ids": i}, serve_cfg,
+                                               train=False)[0])
+    t_full_mpe = _time(full_mpe, sp, ids)
+
+    rows = [
+        ["fig5/backbone/lookup_ms", round(t_lookup_fp * 1e3),
+         f"{t_lookup_fp:.3f}ms"],
+        ["fig5/backbone/total_ms", round(t_full_fp * 1e3), f"{t_full_fp:.3f}ms"],
+        ["fig5/mpe/lookup_ms", round(t_lookup_mpe * 1e3),
+         f"{t_lookup_mpe:.3f}ms (packed dequant)"],
+        ["fig5/mpe/total_ms", round(t_full_mpe * 1e3), f"{t_full_mpe:.3f}ms"],
+        ["fig5/mpe/storage", 0, f"bytes={res['packed_bytes']} "
+         f"ratio={res['storage_ratio']:.4f}"],
+    ]
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(main(), ["name", "us_per_call", "derived"])

@@ -1,0 +1,104 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = hbm_bytes_per_device / HBM_BW
+    collective term = collective_bytes_per_device / ICI_BW
+    MODEL_FLOPS     = analytical useful flops (6·N·D train, 2·N·D serve;
+                      MoE uses active params)
+    usefulness      = MODEL_FLOPS / (chips · flops_per_device)
+
+The dominant term is the projected bottleneck; 'roofline fraction' is
+MODEL_FLOPS/chips/PEAK divided by the dominant term — i.e. how close the cell
+would run to the compute roofline if it achieved the analyzed schedule.
+
+Usage: python -m benchmarks.roofline [--dir benchmarks/artifacts] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+# analytical parameter counts (active params for MoE)
+PARAMS = {
+    "starcoder2-7b": dict(total=7.2e9, active=7.2e9),
+    "qwen3-32b": dict(total=32.8e9, active=32.8e9),
+    "internlm2-1.8b": dict(total=1.9e9, active=1.9e9),
+    "deepseek-moe-16b": dict(total=16.4e9, active=2.8e9),
+    "grok-1-314b": dict(total=316e9, active=80e9),
+}
+
+
+def model_flops(cell: dict) -> float | None:
+    meta = cell["meta"]
+    arch = cell["cell"].split("/")[0]
+    if meta.get("family") == "lm":
+        p = PARAMS.get(arch)
+        if p is None:
+            return None
+        tokens = meta.get("tokens", 0)
+        if meta["kind"] == "train":
+            return 6.0 * p["active"] * tokens
+        if meta["kind"] == "prefill":
+            return 2.0 * p["active"] * tokens
+        # decode: matmul flops + KV attention flops
+        kv = meta.get("kv_len", 0)
+        return 2.0 * p["active"] * tokens + 4.0 * tokens * kv * 1e4
+    return None  # recsys/gnn cells are gather/scatter bound; flops ≠ utility
+
+
+def analyze_cell(cell: dict) -> dict:
+    chips = cell["n_chips"]
+    t_compute = cell["flops_per_device"] / PEAK_FLOPS_BF16
+    t_memory = cell["hbm_bytes_per_device"] / HBM_BW
+    t_coll = cell["collectives_per_device"]["total_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell)
+    name = cell["cell"]
+    if cell.get("variant"):
+        name += f" [{cell['variant']}]"
+    out = {
+        "cell": name, "mesh": cell["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf,
+    }
+    if mf:
+        out["usefulness"] = mf / (chips * cell["flops_per_device"] + 1e-30)
+        ideal = mf / chips / PEAK_FLOPS_BF16
+        out["roofline_fraction"] = ideal / max(terms[dominant], 1e-30)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/artifacts")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "dryrun_*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell["mesh"] != args.mesh:
+            continue
+        r = analyze_cell(cell)
+        rows.append(r)
+    print(f"{'cell':58s} {'compute':>10s} {'memory':>10s} {'collective':>11s} "
+          f"{'dominant':>10s} {'roofline%':>9s} {'useful%':>8s}")
+    for r in rows:
+        rf = f"{100*r.get('roofline_fraction', float('nan')):.1f}" \
+            if "roofline_fraction" in r else "-"
+        uf = f"{100*r.get('usefulness', float('nan')):.1f}" \
+            if "usefulness" in r else "-"
+        print(f"{r['cell']:58s} {r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:11.4f} {r['dominant']:>10s} {rf:>9s} {uf:>8s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Paper-scale settings take hours
+on this CPU container; the default sizes are reduced but preserve every
+comparison the paper makes (see benchmarks/common.py). §Roofline numbers come
+from the dry-run artifacts (benchmarks/roofline.py) and are appended when
+artifacts exist.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table3|fig3|table4|fig4|fig5|fig6|roofline")
+    ap.add_argument("--full", action="store_true",
+                    help="all 4 backbones in table3 (slower)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import fig3, fig4, fig5, fig6, table3, table4
+    sections = {
+        "table3": lambda: table3.main(full=args.full),
+        "fig3": fig3.main,
+        "table4": table4.main,
+        "fig4": fig4.main,
+        "fig5": fig5.main,
+        "fig6": fig6.main,
+    }
+    rows = []
+    failures = []
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            rows.extend(fn())
+        except Exception as e:  # noqa: BLE001 — a section failure is reported,
+            import traceback    # not fatal to the remaining tables
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e}", flush=True)
+
+    if (args.only in (None, "roofline")) and \
+            os.path.isdir("benchmarks/artifacts"):
+        print("# --- roofline (from dry-run artifacts) ---", flush=True)
+        from benchmarks import roofline
+        roofline.main()
+    if failures:
+        print(f"# {len(failures)} section(s) failed: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

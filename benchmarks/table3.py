@@ -1,0 +1,33 @@
+"""Paper Table 3: accuracy (AUC/Logloss) + storage ratio per method × model.
+
+Validated claims: (i) MPE reaches the lowest ratio at ≈backbone accuracy,
+(ii) QR loses accuracy even at 2×, (iii) LSQ+ holds at 6 bits, ALPT at 8,
+(iv) PEP/OptFS compress little when features carry signal.
+"""
+from __future__ import annotations
+
+from benchmarks.common import METHOD_CFGS, print_csv, run_baseline, run_mpe
+
+
+def main(backbones=("dnn", "dcn"), full: bool = False):
+    if full:
+        backbones = ("dnn", "dcn", "deepfm", "ipnn")
+    rows = []
+    for bb in backbones:
+        for method in ("backbone", "qr", "pep", "optfs", "alpt", "lsq"):
+            r = run_baseline(bb, method)
+            rows.append([f"table3/{bb}/{method}",
+                         round(r["seconds"] * 1e6),
+                         f"auc={r['auc']:.4f} logloss={r['logloss']:.4f} "
+                         f"ratio={r['ratio']:.4f}"])
+            print(rows[-1])
+        r = run_mpe(bb)
+        rows.append([f"table3/{bb}/mpe", round(r["seconds"] * 1e6),
+                     f"auc={r['auc']:.4f} logloss={r['logloss']:.4f} "
+                     f"ratio={r['ratio']:.4f}"])
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(main(), ["name", "us_per_call", "derived"])

@@ -1,0 +1,22 @@
+"""Paper Table 4: retraining ablation (DNN).
+
+  w/o retraining < LTH retraining < MPE retraining (accuracy).
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, run_mpe
+
+
+def main():
+    rows = []
+    for mode in ("none", "lth", "mpe"):
+        r = run_mpe("dnn", retrain_mode=mode)
+        rows.append([f"table4/{mode}", round(r["seconds"] * 1e6),
+                     f"auc={r['auc']:.4f} logloss={r['logloss']:.4f} "
+                     f"ratio={r['ratio']:.4f}"])
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    print_csv(main(), ["name", "us_per_call", "derived"])

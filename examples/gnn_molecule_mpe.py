@@ -1,0 +1,55 @@
+"""MPE on GIN's categorical atom-type embedding (the molecule cell).
+
+    PYTHONPATH=src python examples/gnn_molecule_mpe.py [--steps 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mpe import MPEConfig
+from repro.core.sampling import average_bits, feature_bits, sample_group_bits
+from repro.data.graphs import make_molecule_batch
+from repro.models.gnn import GIN, GINConfig
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    mpe_cfg = MPEConfig(lam=3e-5, group_size=16)  # small vocab -> small groups
+    cfg = GINConfig(n_layers=3, d_hidden=32, input_mode="categorical",
+                    atom_vocab=119, readout="graph", n_classes=2,
+                    compressor="mpe_search", comp_cfg=mpe_cfg._asdict())
+    # atom frequencies are Zipf-ish in real molecule corpora
+    freqs = (np.arange(1, 120) ** -1.1)
+    params, buffers = GIN.init(jax.random.PRNGKey(0), cfg, freqs=freqs)
+
+    n_graphs = 64
+
+    def data_fn(step):
+        b = make_molecule_batch(n_graphs, 12, 24, atom_vocab=119, seed=step)
+        b.pop("n_graphs")  # static — injected below, not traced
+        return b
+
+    def loss_fn(p, bu, st, batch, *, step=None):
+        graph = dict(batch, n_graphs=n_graphs)
+        loss, ce = GIN.loss_fn(p, bu, graph, cfg, lam=mpe_cfg.lam, train=True,
+                               step=step)
+        return loss, (st, ce)
+
+    tr = Trainer(loss_fn, params, buffers, {}, adam(3e-3))
+    tr.run(data_fn, args.steps, log_every=50)
+
+    gb = sample_group_bits(tr.params["embedding"], mpe_cfg)
+    fb = feature_bits(gb, buffers["embedding"]["group_of_feature"])
+    print(f"\natom-table avg bits: {average_bits(fb, mpe_cfg):.2f} "
+          f"(ratio {average_bits(fb, mpe_cfg)/32:.4f})")
+
+
+if __name__ == "__main__":
+    main()

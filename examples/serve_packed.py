@@ -1,0 +1,11 @@
+"""Serving scenario: batched request scoring from a bit-packed table.
+
+Thin wrapper over repro.launch.serve (trains a quick pipeline, then measures
+p50/p99 batch-scoring latency split like paper Figure 5).
+
+    PYTHONPATH=src python examples/serve_packed.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-parameter CTR model for a few hundred
+steps with the full MPE pipeline, checkpointing, and packed export.
+
+    PYTHONPATH=src python examples/train_ctr_end_to_end.py [--steps 250]
+
+Model: DNN backbone, 8 fields / 6.3M features × d=16 ≈ 101M embedding params
++ 1024-512-256 MLP (the paper's interaction net). ~15 min on this CPU; on a
+v5e pod slice the same code runs under the production mesh.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.core.mpe import MPEConfig
+from repro.core.pipeline import run_mpe_pipeline
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.embeddings.table import FieldSpec
+from repro.models.dlrm import DLRMConfig
+from repro.nn.module import param_count
+from repro.train.optimizer import adam
+from repro.zoo import dlrm_builder
+
+VOCABS = (2_097_152, 1_048_576, 1_048_576, 786_432, 524_288, 524_288,
+          262_144, 16_384)  # 6.3M features
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="mpe_ckpt_")
+
+    ds = SyntheticCTR(CTRSpec(field_vocabs=VOCABS, batch_size=args.batch))
+    fields = tuple(FieldSpec(f"f{i}", v) for i, v in enumerate(VOCABS))
+    cfg = DLRMConfig(fields=fields, d_embed=16,
+                     mlp_hidden=(1024, 512, 256), backbone="dnn")
+    build = dlrm_builder(cfg, ds.expected_frequencies(), lam=1e-5,
+                         eval_batches=ds.eval_set(2))
+
+    probe = build(jax.random.PRNGKey(0), "plain", {})
+    print(f"model size: {param_count(probe['params'])/1e6:.1f}M params "
+          f"({sum(VOCABS)*16/1e6:.0f}M embedding)")
+    del probe
+
+    res = run_mpe_pipeline(
+        build, lambda step: ds.batch(step), key=jax.random.PRNGKey(0),
+        mpe_cfg=MPEConfig(lam=1e-5), optimizer=adam(1e-3),
+        search_steps=args.steps, retrain_steps=args.steps,
+        eval_fn=build(jax.random.PRNGKey(0), "plain", {})["eval_fn"],
+        ckpt_dir=ckpt)
+    print(f"\nMPE on 101M-param table: ratio={res['storage_ratio']:.4f} "
+          f"({1/max(res['storage_ratio'],1e-9):.0f}x), "
+          f"avg_bits={res['avg_bits']:.2f}, eval={res['eval']}")
+    print(f"checkpoints in {ckpt} (resume by re-running with --ckpt-dir)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Architecture registry: one module per assigned arch (``--arch <id>``).
+
+Each module defines ``ARCH`` (an ArchSpec). ``get_arch(arch_id)`` resolves it;
+``ALL_ARCHS`` lists every id. Exact configs come from public literature — the
+citation is recorded on each spec.
+"""
+from repro.configs.base import ArchSpec, get_arch, ALL_ARCHS, register_arch
+
+# import side effects populate the registry
+from repro.configs import (starcoder2_7b, qwen3_32b, internlm2_1_8b,  # noqa: F401
+                           deepseek_moe_16b, grok_1_314b, gin_tu,
+                           two_tower_retrieval, bst, sasrec, wide_deep,
+                           dlrm_criteo)
+
+__all__ = ["ArchSpec", "get_arch", "ALL_ARCHS", "register_arch"]

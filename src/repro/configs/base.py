@@ -1,0 +1,41 @@
+"""ArchSpec: the contract between configs/, launch/dryrun.py and tests.
+
+  make_config(reduced)   -> model config NamedTuple (full or smoke-test size)
+  shapes                 -> tuple of shape-cell names (the assigned set)
+
+Cell construction (input specs, step functions, shardings) lives in
+``repro.launch.cells`` keyed by ``family``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+
+class ArchSpec(NamedTuple):
+    arch_id: str
+    family: str                    # lm | gnn | recsys
+    make_config: Callable          # (reduced: bool) -> model config
+    shapes: tuple
+    citation: str = ""
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register_arch(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    return _REGISTRY[arch_id]
+
+
+def ALL_ARCHS():
+    return sorted(_REGISTRY)
+
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")

@@ -1,0 +1,31 @@
+"""bst [arXiv:1905.06874; paper] — Behavior Sequence Transformer (Alibaba).
+
+embed_dim=32, seq_len=20, 1 transformer block, 8 heads, MLP 1024-512-256.
+Item vocab 16,777,216 + 4 context fields × 65,536.
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, register_arch
+from repro.embeddings.table import FieldSpec
+from repro.models.bst import BSTConfig
+
+ITEM_VOCAB = 16_777_216
+CTX_VOCAB = 65_536
+
+
+def make_config(reduced: bool = False) -> BSTConfig:
+    if reduced:
+        return BSTConfig(item_vocab=2_000,
+                         ctx_fields=(FieldSpec("c0", 100),),
+                         d_embed=16, seq_len=8, mlp_hidden=(32, 16),
+                         compressor="mpe_search")
+    return BSTConfig(
+        item_vocab=ITEM_VOCAB,
+        ctx_fields=tuple(FieldSpec(f"c{i}", CTX_VOCAB) for i in range(4)),
+        d_embed=32, seq_len=20, n_blocks=1, n_heads=8,
+        mlp_hidden=(1024, 512, 256), compressor="mpe_search",
+    )
+
+
+ARCH = register_arch(ArchSpec(
+    arch_id="bst", family="recsys", make_config=make_config,
+    shapes=RECSYS_SHAPES, citation="arXiv:1905.06874; paper",
+))

@@ -1,0 +1,33 @@
+"""wide-deep [arXiv:1606.07792; paper] — 40 sparse fields, d=32, MLP 1024-512-256.
+
+Tables: 40 fields × 1,048,576 rows = 41.9M rows (Zipf-popular). Training runs
+the MPE search phase (the paper's system); serving uses the bit-packed
+mixed-precision table (§4).
+"""
+from repro.configs.base import ArchSpec, RECSYS_SHAPES, register_arch
+from repro.embeddings.table import FieldSpec
+from repro.models.wide_deep import WideDeepConfig
+
+N_FIELDS = 40
+FIELD_VOCAB = 1_048_576
+
+
+def fields(reduced: bool = False):
+    v = 1_000 if reduced else FIELD_VOCAB
+    n = 6 if reduced else N_FIELDS
+    return tuple(FieldSpec(f"f{i}", v) for i in range(n))
+
+
+def make_config(reduced: bool = False) -> WideDeepConfig:
+    return WideDeepConfig(
+        fields=fields(reduced),
+        d_embed=32,
+        mlp_hidden=(64, 32) if reduced else (1024, 512, 256),
+        compressor="mpe_search",
+    )
+
+
+ARCH = register_arch(ArchSpec(
+    arch_id="wide-deep", family="recsys", make_config=make_config,
+    shapes=RECSYS_SHAPES, citation="arXiv:1606.07792; paper",
+))

@@ -1,0 +1,26 @@
+"""The paper's contribution: Mixed-Precision Embeddings (MPE).
+
+Public surface:
+  - quantizer: LSQ+ fake quant with the paper's STE gradients (Eqs. 2, 4-6)
+  - MPESearchEmbedding / MPEConfig: search phase (Eqs. 8-10)
+  - sample_group_bits / MPERetrainEmbedding: sampling (Eq. 11) + retraining
+  - build_packed_table / packed_lookup: bit-packed inference tables (§4)
+  - baselines: QR-Trick, ALPT, LSQ+, PEP, OptFS (Table 3)
+  - get_compressor: registry keyed by method name
+"""
+from repro.core.api import get_compressor, REGISTRY
+from repro.core.mpe import MPEConfig, MPESearchEmbedding, make_groups
+from repro.core.quantizer import lsq_quantize, mixed_expectation, int_bounds
+from repro.core.sampling import (MPERetrainEmbedding, feature_bits,
+                                 sample_group_bits, average_bits)
+from repro.core.inference import (build_packed_table, packed_lookup,
+                                  packed_specs, packed_storage_bytes)
+import repro.core.baselines  # noqa: F401  (registry side-effects)
+import repro.core.compressors  # noqa: F401
+
+__all__ = [
+    "get_compressor", "REGISTRY", "MPEConfig", "MPESearchEmbedding",
+    "make_groups", "lsq_quantize", "mixed_expectation", "int_bounds",
+    "MPERetrainEmbedding", "feature_bits", "sample_group_bits", "average_bits",
+    "build_packed_table", "packed_lookup", "packed_specs", "packed_storage_bytes",
+]

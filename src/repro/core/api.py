@@ -1,0 +1,46 @@
+"""Common interface for embedding compressors (MPE + all Table-3 baselines).
+
+Every compressor is a class of static methods:
+
+    init(key, n, d, freqs, cfg)          -> (params, buffers)
+    lookup(params, buffers, ids, cfg, *, train=False, step=None) -> (*ids, d)
+    reg_loss(params, buffers, cfg)       -> scalar (caller scales by its λ)
+    storage_ratio(params, buffers, cfg)  -> float, post-training bytes ratio
+    post_update(params, buffers, cfg, key) -> params   (optional projection hook)
+
+``buffers`` are non-trained constants (group maps, frequency stats, code
+assignments); ``cfg`` is a plain dict or NamedTuple of static hyperparameters.
+"""
+from __future__ import annotations
+
+REGISTRY: dict[str, type] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_compressor(name: str):
+    if name not in REGISTRY:
+        # import side-effect registration
+        import repro.core.baselines  # noqa: F401
+        import repro.core.compressors  # noqa: F401
+    return REGISTRY[name]
+
+
+class BaseCompressor:
+    """Default no-op hooks shared by all compressors."""
+    name = "base"
+
+    @staticmethod
+    def reg_loss(params, buffers, cfg):
+        import jax.numpy as jnp
+        return jnp.zeros(())
+
+    @staticmethod
+    def post_update(params, buffers, cfg, key):
+        return params

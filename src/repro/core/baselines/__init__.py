@@ -1,0 +1,8 @@
+from repro.core.baselines.plain import PlainEmbedding
+from repro.core.baselines.lsq_uniform import LSQUniform
+from repro.core.baselines.alpt import ALPT
+from repro.core.baselines.qr_trick import QRTrick
+from repro.core.baselines.pep import PEP
+from repro.core.baselines.optfs import OptFS
+
+__all__ = ["PlainEmbedding", "LSQUniform", "ALPT", "QRTrick", "PEP", "OptFS"]

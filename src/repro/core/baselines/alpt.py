@@ -1,0 +1,75 @@
+"""ALPT — Adaptive Low-Precision Training [arXiv:2212.05735, AAAI'23].
+
+Unlike QAT (full-precision master weights), ALPT keeps the embedding table in
+a b-bit representable state *throughout training*: after every optimizer step
+the table is projected back onto the quantization grid with stochastic
+rounding, with a learnable step size α adapted via LSQ-style gradients. The
+paper reports b=8 as ALPT's lossless floor (Table 3) because no full-precision
+master copy exists.
+
+Functional-JAX adaptation: the param leaf is float but always grid-valued
+(== dequantized codes); ``post_update`` performs the stochastic-rounding
+projection, so checkpoint/serving can store pure int codes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from repro.core.api import BaseCompressor, register
+from repro.nn import init as initializers
+
+
+@register("alpt")
+class ALPT(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del freqs
+        cfg = cfg or {}
+        std = cfg.get("embed_std", initializers.EMBED_STD)
+        b = cfg.get("bits", 8)
+        alpha0 = quantizer.init_alpha(std, b)
+        emb = initializers.normal(key, (n, d), std=std)
+        # start on-grid
+        params = {
+            "emb": emb,
+            "alpha": jnp.asarray(alpha0, jnp.float32),
+        }
+        params["emb"] = ALPT._project(params["emb"], params["alpha"], b,
+                                      jax.random.fold_in(key, 1))
+        return params, {}
+
+    @staticmethod
+    def _project(emb, alpha, b, key):
+        """Stochastic rounding of emb/alpha onto the signed b-bit grid."""
+        n_b, p_b = quantizer.int_bounds(b)
+        v = emb / alpha
+        low = jnp.floor(v)
+        frac = v - low
+        up = jax.random.uniform(key, emb.shape) < frac
+        codes = jnp.clip(low + up.astype(low.dtype), n_b, p_b)
+        return alpha * codes
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del buffers, step
+        b = (cfg or {}).get("bits", 8)
+        rows = jnp.take(params["emb"], ids, axis=0)
+        if train:
+            # LSQ-style fake quant so α receives its adaptation gradient.
+            return quantizer.lsq_quantize(rows, params["alpha"],
+                                          jnp.zeros((), jnp.float32), int(b))
+        return rows  # already grid-valued
+
+    @staticmethod
+    def post_update(params, buffers, cfg, key):
+        del buffers
+        b = (cfg or {}).get("bits", 8)
+        params = dict(params)
+        params["emb"] = ALPT._project(params["emb"], params["alpha"], int(b), key)
+        return params
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        return (cfg or {}).get("bits", 8) / 32.0

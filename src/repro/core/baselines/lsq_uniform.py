@@ -1,0 +1,39 @@
+"""Uniform-precision QAT with LSQ+ (the 'LSQ+' row of Table 3).
+
+One bit-width for the whole table (paper finds b=6 is the lossless floor).
+This is exactly MPE with a degenerate one-candidate distribution, which is the
+limitation MPE fixes (§1.2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from repro.core.api import BaseCompressor, register
+from repro.nn import init as initializers
+
+
+@register("lsq")
+class LSQUniform(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del freqs
+        cfg = cfg or {}
+        std = cfg.get("embed_std", initializers.EMBED_STD)
+        b = cfg.get("bits", 6)
+        return {
+            "emb": initializers.normal(key, (n, d), std=std),
+            "alpha": jnp.asarray(quantizer.init_alpha(std, b), jnp.float32),
+            "beta": jnp.zeros((d,), jnp.float32),
+        }, {}
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del buffers, train, step
+        b = (cfg or {}).get("bits", 6)
+        rows = jnp.take(params["emb"], ids, axis=0)
+        return quantizer.lsq_quantize(rows, params["alpha"], params["beta"], int(b))
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        return (cfg or {}).get("bits", 6) / 32.0

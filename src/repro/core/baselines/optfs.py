@@ -1,0 +1,59 @@
+"""OptFS — Optimizing Feature Set via learnable gates [arXiv:2301.10909, WWW'23].
+
+A per-feature gate g ∈ [0,1] multiplies the embedding; learning-by-continuation
+sharpens σ(w·τ_anneal) toward a step function over training. Features with
+g < 0.5 at the end are dropped (zero rows — the b=0 case of MPE, §3.1). An L1
+regularizer pushes gates closed; the storage ratio is the kept-row fraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import BaseCompressor, register
+from repro.nn import init as initializers
+
+ANNEAL_START = 1.0
+ANNEAL_END = 100.0
+
+
+@register("optfs")
+class OptFS(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del freqs
+        std = (cfg or {}).get("embed_std", initializers.EMBED_STD)
+        return {
+            "emb": initializers.normal(key, (n, d), std=std),
+            "gate_logit": jnp.full((n,), 1.0, jnp.float32),  # start ~open (σ≈0.73)
+        }, {}
+
+    @staticmethod
+    def _anneal(step, total_steps):
+        if step is None:
+            return ANNEAL_END
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return ANNEAL_START * (ANNEAL_END / ANNEAL_START) ** t
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del buffers
+        cfg = cfg or {}
+        rows = jnp.take(params["emb"], ids, axis=0)
+        logit = jnp.take(params["gate_logit"], ids, axis=0)
+        if train:
+            tau = OptFS._anneal(step, cfg.get("total_steps", 1000))
+            gate = jax.nn.sigmoid(logit * tau)
+        else:
+            gate = (logit > 0.0).astype(rows.dtype)
+        return rows * gate[..., None]
+
+    @staticmethod
+    def reg_loss(params, buffers, cfg):
+        del buffers, cfg
+        return jnp.mean(jax.nn.sigmoid(params["gate_logit"]))
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        import numpy as np
+        return float((np.asarray(params["gate_logit"]) > 0).mean())

@@ -1,0 +1,25 @@
+"""Full-precision backbone embedding (the 'Backbone' row of Table 3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.api import BaseCompressor, register
+from repro.nn import init as initializers
+
+
+@register("plain")
+class PlainEmbedding(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del freqs
+        std = (cfg or {}).get("embed_std", initializers.EMBED_STD)
+        return {"emb": initializers.normal(key, (n, d), std=std)}, {}
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del buffers, cfg, train, step
+        return jnp.take(params["emb"], ids, axis=0)
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        return 1.0

@@ -1,0 +1,47 @@
+"""QR-Trick — quotient-remainder compositional embeddings [arXiv:1909.02107].
+
+e(id) = E_q[id // k]  ∘  E_r[id % k], with ∘ ∈ {mult, add}. Storage is
+(⌈n/k⌉ + k)·d instead of n·d. The MPE paper evaluates it at its minimum 2×
+compression (k=2, ratio ≈ 0.5) where it already loses accuracy (Table 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import BaseCompressor, register
+from repro.nn import init as initializers
+
+
+@register("qr")
+class QRTrick(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del freqs
+        cfg = cfg or {}
+        std = cfg.get("embed_std", initializers.EMBED_STD)
+        k = cfg.get("k", 2)
+        kq, kr = jax.random.split(key)
+        n_q = -(-n // k)
+        params = {
+            "quot": initializers.normal(kq, (n_q, d), std=std),
+            # mult combine: remainder table around 1 so init ≈ quotient table
+            "rem": 1.0 + initializers.normal(kr, (k, d), std=std),
+        }
+        return params, {}
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del buffers, train, step
+        k = (cfg or {}).get("k", 2)
+        combine = (cfg or {}).get("combine", "mult")
+        q = jnp.take(params["quot"], ids // k, axis=0)
+        r = jnp.take(params["rem"], ids % k, axis=0)
+        return q * r if combine == "mult" else q + r
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        n_q = params["quot"].shape[0]
+        k = params["rem"].shape[0]
+        # vs. the uncompressed n×d table this replaced
+        return float(n_q + k) / float(n_q * (cfg or {}).get("k", 2))

@@ -1,0 +1,108 @@
+"""Registry adapters exposing MPE phases through the common compressor API."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import BaseCompressor, register
+from repro.core.mpe import MPEConfig, MPESearchEmbedding
+from repro.core.sampling import (MPERetrainEmbedding, feature_bits,
+                                 sample_group_bits, storage_ratio as _ratio)
+
+
+def as_mpe_config(cfg) -> MPEConfig:
+    if isinstance(cfg, MPEConfig):
+        return cfg
+    if cfg is None:
+        return MPEConfig()
+    return MPEConfig(**{k: v for k, v in cfg.items() if k in MPEConfig._fields})
+
+
+@register("mpe_search")
+class MPESearch(BaseCompressor):
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        return MPESearchEmbedding.init(key, n, d, freqs, as_mpe_config(cfg))
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del train, step
+        return MPESearchEmbedding.lookup(params, buffers, ids, as_mpe_config(cfg))
+
+    @staticmethod
+    def reg_loss(params, buffers, cfg):
+        return MPESearchEmbedding.reg_loss(params, buffers, as_mpe_config(cfg))
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        c = as_mpe_config(cfg)
+        gb = sample_group_bits(params, c)
+        fb = feature_bits(gb, buffers["group_of_feature"])
+        return _ratio(fb, c)
+
+
+@register("packed")
+class Packed(BaseCompressor):
+    """Serving-time compressor: the bit-packed table of §4.
+
+    params = the packed table pytree from ``build_packed_table``; cfg must
+    carry the static meta {"bits": tuple, "d": int}. ``init`` builds a random
+    packed table (tests / dry-run only — production builds via the pipeline).
+    """
+
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        import jax
+        from repro.core.inference import build_packed_table
+        from repro.core.mpe import MPEConfig, MPESearchEmbedding
+        from repro.core.sampling import feature_bits, sample_group_bits
+        c = as_mpe_config(cfg)
+        params, buffers = MPESearchEmbedding.init(key, n, d, freqs, c)
+        gamma = 0.01 * jax.random.normal(key, params["gamma"].shape)
+        gb = sample_group_bits({**params, "gamma": gamma}, c)
+        fb = feature_bits(gb, buffers["group_of_feature"])
+        table, meta = build_packed_table(params["emb"], fb, params["alpha"],
+                                         params["beta"], c)
+        return table, {"meta": meta}
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del train, step
+        from repro.core.inference import packed_lookup
+        meta = (buffers or {}).get("meta") or {"bits": tuple(cfg["bits"]),
+                                               "d": cfg["d"]}
+        return packed_lookup(params, meta, ids)
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        """True packed bytes (pad-free) from the width histogram."""
+        import numpy as np
+        from repro.core.packing import words_per_row
+        meta = (buffers or {}).get("meta") or {"bits": tuple(cfg["bits"]),
+                                               "d": cfg["d"], "n": cfg["n"]}
+        widx = np.asarray(params["width_idx"])
+        n, d = meta["n"], meta["d"]
+        packed = sum(int((widx == i).sum()) * words_per_row(d, b) * 4
+                     for i, b in enumerate(meta["bits"]) if b > 0)
+        return packed / (n * d * 4.0)
+
+
+@register("mpe_retrain")
+class MPERetrain(BaseCompressor):
+    """init() expects cfg to carry the search artifacts (see pipeline.py)."""
+
+    @staticmethod
+    def init(key, n, d, freqs, cfg):
+        del key, n, d, freqs
+        return MPERetrainEmbedding.init(cfg["init_emb"], cfg["alpha"],
+                                        cfg["beta"], cfg["bits_idx"])
+
+    @staticmethod
+    def lookup(params, buffers, ids, cfg, *, train=False, step=None):
+        del train, step
+        return MPERetrainEmbedding.lookup(params, buffers, ids, as_mpe_config(cfg))
+
+    @staticmethod
+    def storage_ratio(params, buffers, cfg):
+        c = as_mpe_config(cfg)
+        return _ratio(np.asarray(buffers["bits_idx"]), c)

@@ -1,0 +1,110 @@
+"""Packed mixed-precision inference table (paper §4, TPU-adapted).
+
+Storage layout: one bit-packed subtable per non-zero candidate width. Rows are
+permuted so every subtable is dense; two small index vectors map a global
+feature id to (width bucket, local row). Sub-8-bit codes are packed into
+uint32 words (see ``repro.core.packing``); a lookup gathers the packed words,
+unpacks with static shifts, and dequantizes ``α_b · code + β``.
+
+The pure-jnp lookup below computes all width buckets and selects — static
+shapes, shards cleanly under pjit (subtables row-sharded over the model axis).
+``repro.kernels.mpe_lookup`` is the fused Pallas version of the per-bucket
+gather+unpack+dequant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.mpe import MPEConfig
+from repro.core.quantizer import int_bounds, quantize_codes
+
+
+def _pad_rows(n: int, multiple: int) -> int:
+    return max(multiple, -(-n // multiple) * multiple)
+
+
+def build_packed_table(emb, bits_idx_per_feature, alpha, beta, cfg: MPEConfig,
+                       row_pad_multiple: int = 512):
+    """Quantize + pack a trained table.
+
+    Returns a dict pytree ``table`` plus a static metadata dict.
+    """
+    emb = np.asarray(emb)
+    bits_idx = np.asarray(bits_idx_per_feature)
+    alpha_np = np.asarray(alpha)
+    beta_np = np.asarray(beta)
+    n, d = emb.shape
+
+    subtables = {}
+    local_idx = np.zeros((n,), np.int32)
+    for i, b in enumerate(cfg.bits):
+        sel = np.nonzero(bits_idx == i)[0]
+        local_idx[sel] = np.arange(sel.shape[0], dtype=np.int32)
+        if b == 0:
+            continue
+        rows = emb[sel] if sel.size else np.zeros((0, d), emb.dtype)
+        codes = np.asarray(quantize_codes(jnp.asarray(rows), alpha_np[i], beta_np, int(b)))
+        padded = _pad_rows(codes.shape[0], row_pad_multiple)
+        n_b, _ = int_bounds(b)
+        codes_p = np.full((padded, d), n_b, np.int32)
+        codes_p[:codes.shape[0]] = codes
+        subtables[f"b{b}"] = jnp.asarray(np.asarray(packing.pack_codes(jnp.asarray(codes_p), b)))
+
+    table = {
+        "subtables": subtables,
+        "local_idx": jnp.asarray(local_idx),
+        "width_idx": jnp.asarray(bits_idx.astype(np.int32)),
+        "alpha": jnp.asarray(alpha_np),
+        "beta": jnp.asarray(beta_np),
+    }
+    meta = {"bits": cfg.bits, "d": d, "n": n}
+    return table, meta
+
+
+def packed_lookup(table, meta, ids: jnp.ndarray) -> jnp.ndarray:
+    """ids: any int shape -> (*ids.shape, d) fp32 dequantized embeddings."""
+    bits = meta["bits"]
+    d = meta["d"]
+    flat = ids.reshape(-1)
+    widx = jnp.take(table["width_idx"], flat, axis=0)           # (B,)
+    lidx = jnp.take(table["local_idx"], flat, axis=0)           # (B,)
+    out = jnp.zeros((flat.shape[0], d), jnp.float32)
+    for i, b in enumerate(bits):
+        if b == 0:
+            continue  # zero-width features contribute the zero vector
+        sub = table["subtables"][f"b{b}"]
+        words = jnp.take(sub, jnp.clip(lidx, 0, sub.shape[0] - 1), axis=0)
+        codes = packing.unpack_codes(words, b, d)               # (B, d)
+        deq = table["alpha"][i] * codes.astype(jnp.float32) + table["beta"]
+        out = jnp.where((widx == i)[:, None], deq, out)
+    return out.reshape(*ids.shape, d)
+
+
+def packed_storage_bytes(table) -> int:
+    """Bytes of the packed subtables (index vectors reported separately)."""
+    return sum(int(v.size) * 4 for v in jax.tree.leaves(table["subtables"]))
+
+
+def packed_specs(n: int, d: int, cfg: MPEConfig, width_histogram,
+                 row_pad_multiple: int = 512):
+    """ShapeDtypeStruct stand-ins for a packed table — used by the dry-run.
+
+    ``width_histogram``: fraction of rows per candidate width (sums to 1).
+    """
+    subtables = {}
+    for i, b in enumerate(cfg.bits):
+        if b == 0:
+            continue
+        rows = _pad_rows(int(n * width_histogram[i]), row_pad_multiple)
+        subtables[f"b{b}"] = jax.ShapeDtypeStruct(
+            (rows, packing.words_per_row(d, b)), jnp.uint32)
+    return {
+        "subtables": subtables,
+        "local_idx": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "width_idx": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "alpha": jax.ShapeDtypeStruct((len(cfg.bits),), jnp.float32),
+        "beta": jax.ShapeDtypeStruct((d,), jnp.float32),
+    }

@@ -1,0 +1,57 @@
+"""Bit-level packing of sub-8-bit integer codes into uint32 words.
+
+The paper (§4) concatenates each embedding vector at the bit level and stores
+it as Int-16 words (PyTorch has no sub-8-bit dtypes). On TPU the natural lane
+width is 32 bits, so we pack into uint32 words instead: a row of ``d`` codes at
+``b`` bits occupies ceil(d*b/32) words. Codes are stored as unsigned offsets
+``u = code - N_b`` in [0, 2^b).
+
+Both pack and unpack are fully vectorized (no Python loop over rows) and
+jit-able; codes may straddle word boundaries (b ∈ {3,5,6,7} with 32 % b != 0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import int_bounds
+
+
+def words_per_row(d: int, b: int) -> int:
+    return -(-d * b // 32)  # ceil
+
+
+def pack_codes(codes: jnp.ndarray, b: int) -> jnp.ndarray:
+    """codes: (n, d) signed ints in [N_b, P_b] -> (n, W) uint32."""
+    n, d = codes.shape
+    n_b, _ = int_bounds(b)
+    w = words_per_row(d, b)
+    u = (codes - n_b).astype(jnp.uint32)            # (n, d) in [0, 2^b)
+    bitpos = jnp.arange(d) * b
+    w0 = bitpos // 32                               # (d,)
+    off = (bitpos % 32).astype(jnp.uint32)
+    lo = u << off                                   # uint32: overflow bits drop
+    straddles = (bitpos % 32) + b > 32
+    shift_hi = jnp.clip(32 - (bitpos % 32), 0, 31).astype(jnp.uint32)
+    hi = jnp.where(straddles, u >> shift_hi, jnp.uint32(0))
+    words = jnp.zeros((n, w), jnp.uint32)
+    words = words.at[:, w0].add(lo)                 # disjoint bits: add == or
+    w1 = jnp.clip(w0 + 1, 0, w - 1)
+    words = words.at[:, w1].add(hi)
+    return words
+
+
+def unpack_codes(words: jnp.ndarray, b: int, d: int) -> jnp.ndarray:
+    """(n, W) uint32 -> (n, d) signed int32 codes."""
+    n_b, _ = int_bounds(b)
+    w = words.shape[-1]
+    bitpos = jnp.arange(d) * b
+    w0 = bitpos // 32
+    off = (bitpos % 32).astype(jnp.uint32)
+    lo = words[..., w0] >> off
+    straddles = (bitpos % 32) + b > 32
+    shift_hi = jnp.clip(32 - (bitpos % 32), 0, 31).astype(jnp.uint32)
+    w1 = jnp.clip(w0 + 1, 0, w - 1)
+    hi = jnp.where(straddles, words[..., w1] << shift_hi, jnp.uint32(0))
+    mask = jnp.uint32((1 << b) - 1)
+    u = (lo | hi) & mask
+    return u.astype(jnp.int32) + n_b

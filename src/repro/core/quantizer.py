@@ -1,0 +1,124 @@
+"""LSQ+ uniform affine quantizer with the paper's closed-form STE gradients.
+
+Implements paper Eq. (2) forward and Eqs. (4)(5)(6) backward exactly:
+
+    v    = (theta - beta) / alpha
+    vbar = clamp(round(v), N_b, P_b),  N_b = -2^(b-1), P_b = 2^(b-1) - 1
+    Q    = alpha * vbar + beta
+
+    dQ/dtheta = 1[N_b < v < P_b]                                   (Eq. 4)
+    dQ/dalpha = N_b        if v <= N_b                             (Eq. 5)
+                round(v)-v if N_b < v < P_b
+                P_b        if v >= P_b
+    dQ/dbeta  = 1[v <= N_b or v >= P_b]                            (Eq. 6)
+
+``b`` is a static Python int (bit-widths are architecture constants); ``alpha``
+is a scalar shared per bit-width and ``beta`` a per-dimension vector, matching
+§3.3 ("a single step size for each bit-width and a single offset for each
+embedding dimension").
+
+b == 0 means the zero-embedding / feature-dropped case (§3.1) and is handled
+by callers (contributes a zero vector with zero gradients).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def int_bounds(b: int) -> tuple[int, int]:
+    """Signed-integer bounds [N_b, P_b] for a b-bit code."""
+    if b < 1:
+        raise ValueError(f"bit-width must be >= 1, got {b}")
+    return -(2 ** (b - 1)), 2 ** (b - 1) - 1
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def lsq_quantize(theta: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
+                 b: int) -> jnp.ndarray:
+    """Fake-quantize ``theta`` at ``b`` bits. alpha: scalar, beta: (d,) or scalar."""
+    n_b, p_b = int_bounds(b)
+    v = (theta - beta) / alpha
+    vbar = jnp.clip(jnp.round(v), n_b, p_b)
+    return alpha * vbar + beta
+
+
+def _fwd(theta, alpha, beta, b):
+    n_b, p_b = int_bounds(b)
+    v = (theta - beta) / alpha
+    vbar = jnp.clip(jnp.round(v), n_b, p_b)
+    alpha_shape = jnp.shape(alpha)
+    beta_shape = jnp.shape(beta)
+    return alpha * vbar + beta, (v, vbar, alpha_shape, beta_shape)
+
+
+def _reduce_to_shape(g, shape):
+    """Sum-reduce cotangent ``g`` down to broadcast source ``shape``."""
+    if g.shape == tuple(shape):
+        return g
+    extra = g.ndim - len(shape)
+    g = jnp.sum(g, axis=tuple(range(extra))) if extra else g
+    keep = tuple(i for i, s in enumerate(shape) if s == 1 and g.shape[i] != 1)
+    if keep:
+        g = jnp.sum(g, axis=keep, keepdims=True)
+    return g.reshape(shape)
+
+
+def _bwd(b, res, g):
+    n_b, p_b = int_bounds(b)
+    v, vbar, alpha_shape, beta_shape = res
+    inside = (v > n_b) & (v < p_b)
+    # Eq. 4
+    d_theta = jnp.where(inside, g, 0.0)
+    # Eq. 5 — alpha is shared across all quantized parameters: reduce-sum.
+    dq_dalpha = jnp.where(v <= n_b, float(n_b),
+                          jnp.where(v >= p_b, float(p_b), vbar - v))
+    d_alpha = _reduce_to_shape(g * dq_dalpha, alpha_shape)
+    # Eq. 6 — beta is shared per embedding dimension: reduce over leading axes.
+    d_beta = _reduce_to_shape(g * jnp.where(inside, 0.0, 1.0), beta_shape)
+    return d_theta, d_alpha, d_beta
+
+
+lsq_quantize.defvjp(_fwd, _bwd)
+
+
+def quantize_codes(theta: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
+                   b: int) -> jnp.ndarray:
+    """Integer codes (no dequant) — used when exporting packed tables."""
+    n_b, p_b = int_bounds(b)
+    v = (theta - beta) / alpha
+    return jnp.clip(jnp.round(v), n_b, p_b).astype(jnp.int32)
+
+
+def dequantize_codes(codes: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    return alpha * codes.astype(jnp.float32) + beta
+
+
+def init_alpha(std: float, b: int) -> float:
+    """LSQ-style step-size init: alpha ≈ 2·E|θ| / sqrt(P_b) with θ~N(0,std)."""
+    if b < 1:
+        return 1.0  # unused placeholder for the b=0 slot
+    _, p_b = int_bounds(b)
+    mean_abs = std * 0.7978845608  # E|N(0,std)| = std * sqrt(2/pi)
+    return float(2.0 * mean_abs / max(p_b, 1) ** 0.5)
+
+
+def mixed_expectation(rows: jnp.ndarray, probs: jnp.ndarray, alpha: jnp.ndarray,
+                      beta: jnp.ndarray, bits: tuple) -> jnp.ndarray:
+    """Paper Eq. (9): ē = Σ_i p_i · Q(e, α_i, β, b_i).
+
+    rows: (..., d) gathered embeddings; probs: (..., m) per-row probabilities
+    over candidate widths; alpha: (m,); beta: (d,); bits: static tuple.
+
+    This is the pure-jnp reference; ``repro.kernels.mpe_qat`` fuses the m
+    passes into one VMEM-resident Pallas kernel.
+    """
+    out = jnp.zeros_like(rows)
+    for i, b in enumerate(bits):
+        if b == 0:
+            continue  # zero vector contribution (feature-selection case)
+        q = lsq_quantize(rows, alpha[i], beta, int(b))
+        out = out + probs[..., i:i + 1] * q
+    return out

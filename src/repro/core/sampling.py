@@ -1,0 +1,72 @@
+"""Precision sampling (paper Eq. 11) and the retraining-phase embedding layer.
+
+After the search phase, each group's final bit-width is the *highest* candidate
+whose probability exceeds 1/(2m) — not the argmax: a high width with modest
+probability still contributed a significant high-precision component to the
+mixture, so the group "needs" it (§3.4).
+
+The retrain layer quantizes each row at its sampled width with plain LSQ+/STE;
+it is the mixture layer with a one-hot p, so it shares the fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizer
+from repro.core.mpe import MPEConfig, MPESearchEmbedding
+
+
+def sample_group_bits(params, cfg: MPEConfig) -> jnp.ndarray:
+    """Eq. (11): per-group sampled width index, shape (g,) int32."""
+    p = MPESearchEmbedding.probabilities(params, cfg)        # (g, m)
+    m = len(cfg.bits)
+    thresh = 1.0 / (2 * m)
+    eligible = p > thresh                                     # at least argmax qualifies
+    idx = jnp.arange(m, dtype=jnp.int32)
+    # highest eligible index (bits sorted ascending in cfg)
+    return jnp.max(jnp.where(eligible, idx, -1), axis=-1).astype(jnp.int32)
+
+
+def feature_bits(group_bits_idx: jnp.ndarray, group_of_feature: jnp.ndarray) -> jnp.ndarray:
+    """Expand per-group width index to per-feature, shape (n,) int32."""
+    return jnp.take(group_bits_idx, group_of_feature, axis=0)
+
+
+def average_bits(bits_idx: jnp.ndarray, cfg: MPEConfig) -> float:
+    b = np.asarray(cfg.bits, np.float32)[np.asarray(bits_idx)]
+    return float(b.mean())
+
+
+def storage_ratio(bits_idx_per_feature: jnp.ndarray, cfg: MPEConfig) -> float:
+    """Bits stored / 32-bit full precision (paper's 'Ratio' column)."""
+    b = np.asarray(cfg.bits, np.float32)[np.asarray(bits_idx_per_feature)]
+    return float(b.mean() / 32.0)
+
+
+class MPERetrainEmbedding:
+    """Fixed-width QAT layer for the retraining phase (§3.4).
+
+    params: emb (reset to the search phase's *initial* values), alpha, beta
+    (warm-started from the searched values). buffers: per-feature width index.
+    """
+
+    @staticmethod
+    def init(init_emb, searched_alpha, searched_beta, bits_idx_per_feature):
+        params = {"emb": init_emb, "alpha": searched_alpha, "beta": searched_beta}
+        buffers = {"bits_idx": bits_idx_per_feature.astype(jnp.int32)}
+        return params, buffers
+
+    @staticmethod
+    def lookup(params, buffers, ids: jnp.ndarray, cfg: MPEConfig) -> jnp.ndarray:
+        rows = jnp.take(params["emb"], ids, axis=0)
+        widx = jnp.take(buffers["bits_idx"], ids, axis=0)         # (*ids,)
+        onehot = jax.nn.one_hot(widx, len(cfg.bits), dtype=rows.dtype)
+        return quantizer.mixed_expectation(rows, onehot, params["alpha"],
+                                           params["beta"], cfg.bits)
+
+    @staticmethod
+    def reg_loss(params, buffers, cfg: MPEConfig) -> jnp.ndarray:
+        del params, buffers, cfg
+        return jnp.zeros(())

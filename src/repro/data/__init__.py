@@ -1,0 +1,8 @@
+from repro.data.synthetic import SyntheticCTR, CTRSpec
+from repro.data.graphs import (make_sbm_graph, make_molecule_batch, CSRGraph,
+                               NeighborSampler)
+from repro.data.tokens import TokenStream
+from repro.data.loader import Prefetcher
+
+__all__ = ["SyntheticCTR", "CTRSpec", "make_sbm_graph", "make_molecule_batch",
+           "CSRGraph", "NeighborSampler", "TokenStream", "Prefetcher"]

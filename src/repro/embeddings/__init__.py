@@ -1,0 +1,6 @@
+from repro.embeddings.table import FieldSpec, field_offsets, globalize_ids
+from repro.embeddings.bag import embedding_bag, segment_mean
+from repro.embeddings.frequency import zipf_frequencies, count_frequencies
+
+__all__ = ["FieldSpec", "field_offsets", "globalize_ids", "embedding_bag",
+           "segment_mean", "zipf_frequencies", "count_frequencies"]

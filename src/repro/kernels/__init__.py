@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's embedding hot paths.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (+ custom_vjp where trainable)
+  ref.py    — pure-jnp oracle; tests assert_allclose against it
+
+Validated with interpret=True on CPU (the container has no TPU); BlockSpecs
+are chosen for v5e VMEM/VREG geometry — see DESIGN.md §6.
+"""
+from repro.kernels.mpe_lookup.ops import packed_lookup_kernel
+from repro.kernels.mpe_qat.ops import mixed_expectation_kernel
+from repro.kernels.embedding_bag.ops import embedding_bag_kernel
+from repro.kernels.flash_attention.ops import flash_attention_kernel
+
+__all__ = ["packed_lookup_kernel", "mixed_expectation_kernel",
+           "embedding_bag_kernel", "flash_attention_kernel"]

@@ -1,0 +1,52 @@
+"""Fused multi-hot embedding bag: gather + masked segment-sum in one pass.
+
+JAX has no nn.EmbeddingBag; the jnp formulation materializes the (B, L, d)
+gathered tensor in HBM before reducing. This kernel never does: the grid is
+(B, L) with L innermost, each step DMAs one table row (scalar-prefetched id)
+into VMEM and accumulates into the bag's (1, d) output block, which Pallas
+keeps resident across the L revisits. HBM traffic drops from
+B·L·d·(read+write) + B·d to B·L·d reads + B·d writes — and the row DMA for
+(i, j+1) overlaps the accumulate of (i, j) via the automatic pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, row_ref, mask_ref, out_ref):
+    del idx_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...] * mask_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(table: jnp.ndarray, ids: jnp.ndarray,
+                         mask: jnp.ndarray, *, interpret: bool = True):
+    """table: (N, d); ids, mask: (B, L) -> (B, d) masked sum per bag."""
+    bsz, l = ids.shape
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, l),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (idx_ref[i * l + j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i * l + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
+        interpret=interpret,
+    )(ids.reshape(-1).astype(jnp.int32), table,
+      mask.reshape(-1, 1).astype(table.dtype))

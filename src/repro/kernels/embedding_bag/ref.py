@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+from repro.embeddings.bag import embedding_bag
+
+
+def embedding_bag_ref(table, ids, mask):
+    return embedding_bag(table, ids, mask, combine="sum")

@@ -1,0 +1,30 @@
+"""Public wrapper: full mixed-precision table lookup through the Pallas path.
+
+Composes the per-width bucket kernels exactly like
+``repro.core.inference.packed_lookup`` composes the jnp reference: gather each
+bucket's rows with the static-width kernel, then select by the row's width.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mpe_lookup.kernel import packed_lookup_pallas
+
+
+def packed_lookup_kernel(table, meta, ids: jnp.ndarray, *,
+                         interpret: bool = True) -> jnp.ndarray:
+    bits = meta["bits"]
+    d = meta["d"]
+    flat = ids.reshape(-1)
+    widx = jnp.take(table["width_idx"], flat, axis=0)
+    lidx = jnp.take(table["local_idx"], flat, axis=0)
+    out = jnp.zeros((flat.shape[0], d), jnp.float32)
+    for i, b in enumerate(bits):
+        if b == 0:
+            continue
+        sub = table["subtables"][f"b{b}"]
+        deq = packed_lookup_pallas(jnp.clip(lidx, 0, sub.shape[0] - 1), sub,
+                                   table["alpha"][i], table["beta"],
+                                   b=b, d=d, interpret=interpret)
+        out = jnp.where((widx == i)[:, None], deq, out)
+    return out.reshape(*ids.shape, d)

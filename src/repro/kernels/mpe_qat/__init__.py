@@ -1,0 +1,4 @@
+from repro.kernels.mpe_qat.ops import mixed_expectation_kernel
+from repro.kernels.mpe_qat.ref import mixed_expectation_ref
+
+__all__ = ["mixed_expectation_kernel", "mixed_expectation_ref"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused QAT kernel: composition of the paper's
+LSQ+ quantizer (with its custom STE vjp) and the Eq. 9 mixture."""
+from __future__ import annotations
+
+from repro.core.quantizer import mixed_expectation
+
+
+def mixed_expectation_ref(rows, probs, alpha, beta, *, bits):
+    return mixed_expectation(rows, probs, alpha, beta, bits)

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: a successful
+SPMD compile for the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh
+means every sharding constraint, collective, and memory budget is consistent.
+Emits per-cell JSON artifacts (memory analysis, FLOPs/bytes, per-collective
+byte counts parsed from the post-SPMD HLO) consumed by benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch wide-deep --shape train_batch
+    python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.cells import build_cell
+from repro.launch.hlo_analysis import analyze
+from repro.dist.sharding import tree_named_shardings
+from repro.configs import get_arch, ALL_ARCHS
+
+
+def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
+             verbose: bool = True, save_dir: str | None = None,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch_id, shape, multi_pod, overrides)
+    in_shardings = tuple(tree_named_shardings(mesh, ps)
+                         for ps in cell.in_pspecs)
+    out_shardings = tree_named_shardings(mesh, cell.out_pspecs)
+
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(cell.step_fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*cell.input_specs)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    loop_aware = analyze(hlo)  # per-device, while-trip-count weighted
+
+    n_chips = mesh.devices.size
+    result = {
+        "cell": cell.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": int(n_chips),
+        "compile_s": round(time.time() - t0, 1),
+        # raw XLA numbers (loop bodies counted once — see hlo_analysis.py)
+        "xla_flops_unweighted": float(cost.get("flops", 0.0)) if cost else None,
+        "xla_bytes_unweighted": (float(cost.get("bytes accessed", 0.0))
+                                 if cost else None),
+        # loop-aware per-device numbers (the roofline inputs)
+        "flops_per_device": loop_aware["flops_per_device"],
+        "hbm_bytes_per_device": loop_aware["hbm_bytes_per_device"],
+        "collectives_per_device": loop_aware["collectives_per_device"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        },
+        "meta": cell.meta,
+    }
+    if verbose:
+        coll = loop_aware["collectives_per_device"]
+        print(f"[dryrun] {cell.name} mesh={result['mesh']} "
+              f"compile={result['compile_s']}s "
+              f"flops/dev={result['flops_per_device']:.3e} "
+              f"hbm/dev={result['hbm_bytes_per_device']:.3e} "
+              f"coll/dev={coll['total_bytes']:.3e}")
+        print("  memory:", result["memory"])
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        fname = f"{arch_id}_{shape}_{result['mesh']}".replace("/", "_")
+        if tag:
+            fname += f"_{tag}"
+            result["variant"] = tag
+            result["overrides"] = overrides
+        with open(os.path.join(save_dir, f"dryrun_{fname}.json"), "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--overrides", default=None,
+                    help="comma-separated k=v config overrides for §Perf "
+                         "variants, e.g. 'shard_activations=true,"
+                         "attn_expand_kv=true,moe.shard_dispatch=true'")
+    ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    args = ap.parse_args()
+
+    overrides = None
+    if args.overrides:
+        overrides = {}
+        for kv in args.overrides.split(","):
+            k, v = kv.split("=", 1)
+            overrides[k.strip()] = {"true": True, "false": False}.get(
+                v.strip().lower(), v.strip())
+
+    cells = []
+    if args.all:
+        for arch_id in ALL_ARCHS():
+            for shape in get_arch(arch_id).shapes:
+                cells.append((arch_id, shape))
+    else:
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = []
+    for arch_id, shape in cells:
+        try:
+            run_cell(arch_id, shape, multi_pod=args.multi_pod,
+                     save_dir=args.out, overrides=overrides, tag=args.tag)
+        except Exception as e:  # noqa: BLE001 — report every failing cell
+            failures.append((arch_id, shape, repr(e)))
+            print(f"[dryrun] FAIL {arch_id}/{shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)}/{len(cells)} cells FAILED")
+        sys.exit(1)
+    print(f"\nall {len(cells)} cells compiled OK "
+          f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""Loop-aware static analysis of post-SPMD HLO for the roofline terms.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, but our
+models scan over layers (and the chunked attention/CE scan over blocks), so
+raw numbers under-count FLOPs/bytes/collective traffic by the trip counts.
+This module parses the compiled HLO text into computations, extracts each
+while's trip count from its condition's compare constant, propagates
+multiplicative weights down the call graph, and accumulates:
+
+  - flops:       2 · |out| · contracted_size for every dot (weighted);
+  - hbm_bytes:   operand+output bytes of every non-fusion-internal op
+                 (fusion internals are VMEM-resident; the fusion call site's
+                 operands/outputs are the real HBM traffic);
+  - collectives: per-op-kind byte totals (output shard bytes, weighted).
+
+All shapes in post-SPMD HLO are per-partition, so every total is per-device —
+exactly what the per-chip roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "while", "conditional", "after-all", "partition-id",
+               "replica-id", "iota", "copy-done", "all-gather-done",
+               "all-reduce-done", "collective-permute-done", "rng-bit-generator"}
+
+_HDR = re.compile(r"^(ENTRY )?%?([A-Za-z_][\w\.\-]*) \(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (.*?) ([\w\-]+)\((.*)$")
+
+
+def _shape_dims(m) -> tuple:
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes_from_str(s: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(s):
+        dtype, dims = _shape_dims(m)
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def split_computations(hlo: str):
+    """-> (entry_name, {name: [op lines]})."""
+    comps, entry = {}, None
+    cur, cur_lines = None, []
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                if m.group(1):
+                    entry = cur
+                cur_lines = []
+        else:
+            if line.startswith("}"):
+                comps[cur] = cur_lines
+                cur = None
+            else:
+                cur_lines.append(line)
+    return entry, comps
+
+
+def _trip_count(cond_lines) -> int:
+    """Largest s32 constant in the loop condition ≈ the trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"s32\[\] constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_REF = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(args: str):
+    """%refs inside the op's parens (attrs after ')' reference computations,
+    which never appear in the defs table, so they filter out naturally)."""
+    depth, end = 1, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _REF.findall(args[:end])
+
+
+def _dot_flops(line: str, defs: dict) -> float:
+    """2 · prod(output dims) · contracted size; operand shapes via defs."""
+    m = _OP.match(line)
+    if not m:
+        return 0.0
+    out_m = _SHAPE.search(m.group(2))
+    if not out_m:
+        return 0.0
+    _, out_dims = _shape_dims(out_m)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = _operand_names(m.group(4))
+    lhs_shape = defs.get(ops[0]) if ops else None
+    if lc is None or lhs_shape is None:
+        return 2.0 * out_elems  # fallback: elementwise-scale estimate
+    lhs_dims = lhs_shape[1]
+    contracted = 1
+    for i in (int(x) for x in lc.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            contracted *= lhs_dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def analyze(hlo: str) -> dict:
+    entry, comps = split_computations(hlo)
+
+    # per-computation static facts (two passes: defs table, then ops)
+    facts = {}
+    for name, lines in comps.items():
+        defs = {}
+        for line in lines:
+            m = _OP.match(line)
+            if m:
+                out_m = _SHAPE.search(m.group(2))
+                if out_m:
+                    defs[m.group(1)] = _shape_dims(out_m)
+            else:  # parameters: "%p = f32[..]{..} parameter(0)" matches _OP;
+                pass  # others (e.g. constants without parens) are irrelevant
+        whiles, calls, dots = [], [], 0.0
+        bytes_ops = 0
+        coll = defaultdict(lambda: [0, 0])  # kind -> [bytes, count]
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            _, out_part, opcode, args = m.groups()
+            if opcode == "while":
+                w = re.search(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)",
+                              line)
+                if w:
+                    whiles.append((w.group(1), w.group(2)))
+            cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+            if cm and opcode != "while":
+                calls.append(cm.group(1))
+            if opcode == "dot":
+                dots += _dot_flops(line, defs)
+            base_op = opcode.replace("-start", "")
+            if base_op in COLLECTIVES and not opcode.endswith("-done"):
+                b = _shape_bytes_from_str(out_part)
+                coll[base_op][0] += b
+                coll[base_op][1] += 1
+            if opcode not in _SKIP_BYTES and not opcode.endswith("-done"):
+                out_b = _shape_bytes_from_str(out_part)
+                operand_bytes = 0
+                passthrough = False
+                for ref in _operand_names(args):
+                    sh = defs.get(ref)
+                    if sh:
+                        n = 1
+                        for d in sh[1]:
+                            n *= d
+                        b = n * _DTYPE_BYTES.get(sh[0], 4)
+                        # in-place accumulation pattern (scan stashes, DUS):
+                        # an operand identical in size to the output aliases
+                        # it; real traffic is the *update*, not the buffer.
+                        if not passthrough and b == out_b and b > (1 << 20):
+                            passthrough = True
+                            continue
+                        operand_bytes += b
+                if passthrough:
+                    out_b = 0  # aliased in-place write; updates counted above
+                bytes_ops += out_b + operand_bytes
+        facts[name] = {"whiles": whiles, "calls": calls, "dot_flops": dots,
+                       "bytes": bytes_ops, "coll": dict(coll),
+                       "is_fusion_body": False}
+
+    # mark fusion bodies (reached via calls= from fusion ops) — their ops are
+    # VMEM-internal; bytes counted at the call site instead.
+    for name, lines in comps.items():
+        for line in lines:
+            m = _OP.match(line)
+            if m and m.group(3) == "fusion":
+                cm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if cm and cm.group(1) in facts:
+                    facts[cm.group(1)]["is_fusion_body"] = True
+
+    # weight propagation over the call graph
+    weights = defaultdict(float)
+
+    def visit(name, w):
+        if name not in facts or w <= 0:
+            return
+        weights[name] += w
+        f = facts[name]
+        for cond, body in f["whiles"]:
+            trips = _trip_count(comps.get(cond, []))
+            visit(cond, w * (trips + 1))
+            visit(body, w * trips)
+        for callee in f["calls"]:
+            visit(callee, w)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_total = defaultdict(lambda: [0.0, 0])
+    for name, w in weights.items():
+        f = facts[name]
+        flops += w * f["dot_flops"]
+        if not f["is_fusion_body"]:
+            hbm_bytes += w * f["bytes"]
+        for kind, (b, c) in f["coll"].items():
+            coll_total[kind][0] += w * b
+            coll_total[kind][1] += int(w * c)
+
+    coll_out = {k: {"bytes": v[0], "count": v[1]} for k, v in coll_total.items()}
+    coll_out["total_bytes"] = sum(v[0] for v in coll_total.values())
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collectives_per_device": coll_out,
+        "n_computations": len(comps),
+    }
+
+
+def breakdown(hlo: str, top: int = 12) -> list:
+    """Top computations by weighted bytes/flops — the §Perf profiling view."""
+    entry, comps = split_computations(hlo)
+    result = analyze(hlo)  # re-walk to populate weights identically
+    # recompute weights (analyze doesn't return them)
+    from collections import defaultdict
+    facts = {}
+    for name, lines in comps.items():
+        whiles, calls = [], []
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            if m.group(3) == "while":
+                w = re.search(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)", line)
+                if w:
+                    whiles.append((w.group(1), w.group(2)))
+            cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+            if cm and m.group(3) != "while":
+                calls.append(cm.group(1))
+        facts[name] = (whiles, calls)
+    weights = defaultdict(float)
+
+    def visit(name, w):
+        if name not in facts:
+            return
+        weights[name] += w
+        whiles, calls = facts[name]
+        for cond, body in whiles:
+            visit(cond, w * (_trip_count(comps.get(cond, [])) + 1))
+            visit(body, w * _trip_count(comps.get(cond, [])))
+        for c in calls:
+            visit(c, w)
+
+    visit(entry, 1.0)
+
+    rows = []
+    for name, lines in comps.items():
+        w = weights.get(name, 0.0)
+        if w <= 0:
+            continue
+        defs = {}
+        for line in lines:
+            m = _OP.match(line)
+            if m:
+                sm = _SHAPE.search(m.group(2))
+                if sm:
+                    defs[m.group(1)] = _shape_dims(sm)
+        dot_fl, byts = 0.0, 0
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            if m.group(3) == "dot":
+                dot_fl += _dot_flops(line, defs)
+            if m.group(3) not in _SKIP_BYTES:
+                byts += _shape_bytes_from_str(m.group(2))
+        rows.append((name, w, w * dot_fl, w * byts))
+    rows.sort(key=lambda r: -r[3])
+    return rows[:top]

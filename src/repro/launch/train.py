@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+Single-host CPU runs execute really; on a TPU pod slice the same script runs
+under the production mesh (sharding specs from launch/cells.py). The MPE
+pipeline (search → sample → retrain → export) is the default recsys flow.
+
+Examples:
+    python -m repro.launch.train --arch wide-deep --steps 500 --reduced
+    python -m repro.launch.train --arch dlrm-criteo --backbone dcn \
+        --compressor mpe --steps 300 --reduced --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.mpe import MPEConfig
+from repro.core.pipeline import run_mpe_pipeline
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.models.dlrm import DLRMConfig
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+from repro.zoo import dlrm_builder, wide_deep_builder
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dlrm-criteo")
+    ap.add_argument("--backbone", default="dnn")
+    ap.add_argument("--compressor", default="mpe",
+                    help="mpe | plain | lsq | alpt | qr | pep | optfs")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--retrain-steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--lam", type=float, default=3e-5)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family != "recsys":
+        raise SystemExit("train.py drives the recsys flow; "
+                         "use examples/ for lm/gnn end-to-end runs")
+
+    if args.arch == "wide-deep":
+        cfg = spec.make_config(args.reduced)
+        fields = cfg.fields
+        builder_fn = wide_deep_builder
+    else:
+        cfg = spec.make_config(args.reduced, backbone=args.backbone) \
+            if args.arch == "dlrm-criteo" else spec.make_config(args.reduced)
+        fields = cfg.fields
+        builder_fn = dlrm_builder
+        if not isinstance(cfg, DLRMConfig):
+            raise SystemExit(f"{args.arch}: use examples/ for this arch")
+
+    ds = SyntheticCTR(CTRSpec(field_vocabs=tuple(f.vocab for f in fields),
+                              batch_size=args.batch, seed=args.seed))
+    eval_batches = ds.eval_set(4)
+    build = builder_fn(cfg, ds.expected_frequencies(), lam=args.lam,
+                       eval_batches=eval_batches)
+
+    if args.compressor == "mpe":
+        res = run_mpe_pipeline(
+            build, lambda s: ds.batch(s), key=jax.random.PRNGKey(args.seed),
+            mpe_cfg=MPEConfig(lam=args.lam), optimizer=adam(args.lr),
+            search_steps=args.steps,
+            retrain_steps=args.retrain_steps or args.steps,
+            eval_fn=build(jax.random.PRNGKey(args.seed), "plain", {})["eval_fn"],
+            ckpt_dir=args.ckpt_dir)
+        print(f"[train] MPE ratio={res['storage_ratio']:.4f} "
+              f"avg_bits={res['avg_bits']:.2f} eval={res['eval']}")
+        return
+
+    comp_cfg = {"bits": 6} if args.compressor == "lsq" else \
+               {"bits": 8} if args.compressor == "alpt" else \
+               {"total_steps": args.steps} if args.compressor == "optfs" else {}
+    bundle = build(jax.random.PRNGKey(args.seed), args.compressor, comp_cfg)
+    from repro.core import get_compressor
+    comp = get_compressor(args.compressor)
+    post = None
+    if args.compressor == "alpt":
+        key_holder = {"k": jax.random.PRNGKey(args.seed + 1)}
+
+        def post(params):
+            key_holder["k"], sub = jax.random.split(key_holder["k"])
+            emb = comp.post_update(params["embedding"], {}, comp_cfg, sub)
+            return dict(params, embedding=emb)
+
+    trainer = Trainer(bundle["loss_fn"], bundle["params"], bundle["buffers"],
+                      bundle["state"], adam(args.lr), ckpt_dir=args.ckpt_dir,
+                      post_update=post)
+    trainer.restore()
+    trainer.run(lambda s: ds.batch(s), args.steps)
+    ev = bundle["eval_fn"](trainer.params, bundle["buffers"], trainer.state)
+    r = comp.storage_ratio(trainer.params["embedding"],
+                           bundle["buffers"]["embedding"], comp_cfg)
+    print(f"[train] {args.compressor} ratio={r:.4f} eval={ev}")
+
+
+if __name__ == "__main__":
+    main()

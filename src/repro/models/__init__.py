@@ -1,0 +1,3 @@
+from repro.models.dlrm import DLRM, DLRMConfig
+
+__all__ = ["DLRM", "DLRMConfig"]

@@ -1,0 +1,119 @@
+"""BST — Behavior Sequence Transformer [arXiv:1905.06874] — assigned config:
+embed_dim=32, seq_len=20, n_blocks=1, n_heads=8, MLP 1024-512-256.
+
+The user's behavior sequence plus the target item pass through a transformer
+block (learned positions, post-LN as in the paper); the flattened outputs are
+concatenated with context-field embeddings and fed to the MLP CTR head. One
+global table covers items + context fields so MPE compresses everything.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.embeddings.table import field_offsets, total_vocab
+from repro.nn import init as initializers
+from repro.nn.attention import MHA
+from repro.nn.linear import Dense
+from repro.nn.mlp import MLP
+from repro.nn.norms import LayerNorm
+
+
+class BSTConfig(NamedTuple):
+    item_vocab: int
+    ctx_fields: tuple = ()
+    d_embed: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    transformer_ff: int = 128
+    mlp_hidden: tuple = (1024, 512, 256)
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+    use_batchnorm: bool = True
+
+
+def _block_init(key, d, n_heads, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn": MHA.init(k1, d, n_heads, head_dim=max(d // n_heads, 4)),
+        "ln1": LayerNorm.init(None, d),
+        "ff1": Dense.init(k2, d, d_ff),
+        "ff2": Dense.init(k3, d_ff, d),
+        "ln2": LayerNorm.init(None, d),
+    }
+
+
+def _block_apply(p, x, n_heads, d):
+    hd = max(d // n_heads, 4)
+    a, _ = MHA.apply(p["attn"], x, n_heads=n_heads, n_kv_heads=n_heads,
+                     head_dim=hd, causal=False, rope_theta=None)
+    x = LayerNorm.apply(p["ln1"], x + a)                       # post-LN (BST paper)
+    h = Dense.apply(p["ff2"], jax.nn.relu(Dense.apply(p["ff1"], x)))
+    return LayerNorm.apply(p["ln2"], x + h)
+
+
+class BST:
+    @staticmethod
+    def init(key, cfg: BSTConfig, freqs=None):
+        from repro.embeddings.table import FieldSpec
+        fields = (FieldSpec("item", cfg.item_vocab), *cfg.ctx_fields)
+        n = total_vocab(fields)
+        keys = jax.random.split(key, 4 + cfg.n_blocks)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((n,), np.float64)
+        emb_params, emb_buffers = comp.init(keys[0], n, cfg.d_embed, freqs, cfg.comp_cfg)
+        f_ctx = len(cfg.ctx_fields)
+        mlp_in = (cfg.seq_len + 1) * cfg.d_embed + f_ctx * cfg.d_embed
+        params = {
+            "embedding": emb_params,
+            "pos": initializers.normal(keys[1], (cfg.seq_len + 1, cfg.d_embed), std=0.02),
+            "blocks": [_block_init(keys[3 + i], cfg.d_embed, cfg.n_heads,
+                                   cfg.transformer_ff) for i in range(cfg.n_blocks)],
+            "mlp": MLP.init(keys[2], mlp_in, cfg.mlp_hidden, d_out=1,
+                            use_batchnorm=cfg.use_batchnorm),
+        }
+        offsets = field_offsets(fields)
+        buffers = {"embedding": emb_buffers,
+                   "item_offset": jnp.asarray(offsets[0]),
+                   "ctx_offsets": jnp.asarray(offsets[1:])}
+        state = {"mlp": MLP.init_state(cfg.mlp_hidden, use_batchnorm=cfg.use_batchnorm)}
+        return params, buffers, state
+
+    @staticmethod
+    def apply(params, buffers, state, batch, cfg: BSTConfig, *,
+              train: bool = False, step=None):
+        """batch: seq_ids (B,S), target_id (B,), ctx_ids (B,Fc), label (B,)."""
+        comp = get_compressor(cfg.compressor)
+        seq = jnp.concatenate([batch["seq_ids"], batch["target_id"][:, None]], axis=1)
+        gids = seq + buffers["item_offset"]
+        x = comp.lookup(params["embedding"], buffers["embedding"], gids,
+                        cfg.comp_cfg, train=train, step=step)   # (B, S+1, d)
+        x = x + params["pos"][None]
+        for blk in params["blocks"]:
+            x = _block_apply(blk, x, cfg.n_heads, cfg.d_embed)
+        feats = [x.reshape(x.shape[0], -1)]
+        if len(cfg.ctx_fields):
+            cgids = batch["ctx_ids"] + buffers["ctx_offsets"][None, :]
+            ctx = comp.lookup(params["embedding"], buffers["embedding"], cgids,
+                              cfg.comp_cfg, train=train, step=step)
+            feats.append(ctx.reshape(ctx.shape[0], -1))
+        deep, new_mlp = MLP.apply(params["mlp"], state["mlp"],
+                                  jnp.concatenate(feats, axis=-1), train=train)
+        reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
+        return deep[:, 0], {"mlp": new_mlp}, reg
+
+    @staticmethod
+    def loss_fn(params, buffers, state, batch, cfg: BSTConfig, *,
+                lam: float = 0.0, train: bool = True, step=None):
+        logits, new_state, reg = BST.apply(params, buffers, state, batch, cfg,
+                                           train=train, step=step)
+        y = batch["label"].astype(jnp.float32)
+        ce = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                      + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return ce + lam * reg, (new_state, ce)

@@ -1,0 +1,108 @@
+"""The paper's four DLRM backbones: DNN, DCN, DeepFM, IPNN (§5.1.2).
+
+All share: a global embedding table over all feature fields (compressed by a
+pluggable compressor — MPE or any baseline), a 1024-512-256 MLP with
+BatchNorm (§5.1.5), and a sigmoid CTR head. They differ only in the
+interaction branch.
+
+batch = {"ids": (B, F) int32 per-field local ids, "label": (B,)}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.embeddings.table import FieldSpec, field_offsets, total_vocab
+from repro.models.interactions import CrossNetwork, fm_second_order, inner_products
+from repro.nn import init as initializers
+from repro.nn.mlp import MLP
+
+
+class DLRMConfig(NamedTuple):
+    fields: tuple                      # tuple[FieldSpec]
+    d_embed: int = 16                  # paper §5.1.5
+    mlp_hidden: tuple = (1024, 512, 256)
+    backbone: str = "dnn"              # dnn | dcn | deepfm | ipnn
+    n_cross_layers: int = 3
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+    use_batchnorm: bool = True
+
+
+class DLRM:
+    @staticmethod
+    def init(key, cfg: DLRMConfig, freqs=None):
+        n = total_vocab(cfg.fields)
+        f = len(cfg.fields)
+        d_in = f * cfg.d_embed
+        keys = jax.random.split(key, 5)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((n,), np.float64)
+        emb_params, emb_buffers = comp.init(keys[0], n, cfg.d_embed, freqs, cfg.comp_cfg)
+
+        if cfg.backbone == "ipnn":
+            mlp_in = d_in + f * (f - 1) // 2
+        else:
+            mlp_in = d_in
+        params = {
+            "embedding": emb_params,
+            "mlp": MLP.init(keys[1], mlp_in, cfg.mlp_hidden, d_out=1,
+                            use_batchnorm=cfg.use_batchnorm),
+        }
+        if cfg.backbone == "dcn":
+            params["cross"] = CrossNetwork.init(keys[2], d_in, cfg.n_cross_layers)
+            params["cross_head"] = initializers.normal(keys[3], (d_in,), std=0.01)
+        if cfg.backbone == "deepfm":
+            # first-order per-feature weights (the FM linear term)
+            params["fm_linear"] = jnp.zeros((n,), jnp.float32)
+            params["fm_bias"] = jnp.zeros((), jnp.float32)
+
+        buffers = {
+            "embedding": emb_buffers,
+            "offsets": jnp.asarray(field_offsets(cfg.fields)),
+        }
+        state = {"mlp": MLP.init_state(cfg.mlp_hidden, use_batchnorm=cfg.use_batchnorm)}
+        return params, buffers, state
+
+    @staticmethod
+    def apply(params, buffers, state, batch, cfg: DLRMConfig, *,
+              train: bool = False, step=None):
+        """Returns (logits (B,), new_state, reg_loss)."""
+        comp = get_compressor(cfg.compressor)
+        gids = batch["ids"] + buffers["offsets"][None, :]
+        emb = comp.lookup(params["embedding"], buffers["embedding"], gids,
+                          cfg.comp_cfg, train=train, step=step)  # (B, F, d)
+        b, f, d = emb.shape
+        flat = emb.reshape(b, f * d)
+
+        if cfg.backbone == "ipnn":
+            mlp_in = jnp.concatenate([flat, inner_products(emb)], axis=-1)
+        else:
+            mlp_in = flat
+        deep, new_mlp_state = MLP.apply(params["mlp"], state["mlp"], mlp_in, train=train)
+        logit = deep[:, 0]
+
+        if cfg.backbone == "dcn":
+            cross = CrossNetwork.apply(params["cross"], flat)
+            logit = logit + cross @ params["cross_head"]
+        elif cfg.backbone == "deepfm":
+            first = jnp.sum(jnp.take(params["fm_linear"], gids, axis=0), axis=1)
+            logit = logit + first + fm_second_order(emb) + params["fm_bias"]
+
+        reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
+        return logit, {"mlp": new_mlp_state}, reg
+
+    @staticmethod
+    def loss_fn(params, buffers, state, batch, cfg: DLRMConfig, *,
+                lam: float = 0.0, train: bool = True, step=None):
+        logits, new_state, reg = DLRM.apply(params, buffers, state, batch, cfg,
+                                            train=train, step=step)
+        labels = batch["label"].astype(jnp.float32)
+        ce = jnp.mean(
+            jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return ce + lam * reg, (new_state, ce)

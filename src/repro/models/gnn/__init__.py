@@ -1,0 +1,3 @@
+from repro.models.gnn.gin import GIN, GINConfig
+
+__all__ = ["GIN", "GINConfig"]

@@ -1,0 +1,117 @@
+"""GIN [arXiv:1810.00826] — assigned config: 5 layers, d=64, sum aggregator,
+learnable ε.
+
+Message passing is jax.ops.segment_sum over an edge list (JAX has no sparse
+SpMM beyond BCOO; the scatter formulation IS the system — DESIGN.md §5):
+
+    h'_i = MLP_l((1 + ε_l)·h_i + Σ_{j→i} h_j)
+
+Supports three input regimes: dense node features (cora/ogbn-products),
+categorical atom types through a pluggable compressor table (molecule cells —
+the MPE-applicable case), and sampled subgraphs from the neighbor sampler
+(minibatch_lg). Graph-level tasks sum-pool node states per graph id.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.nn import init as initializers
+from repro.nn.linear import Dense
+
+
+class GINConfig(NamedTuple):
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 64                    # dense-feature width (ignored if categorical)
+    n_classes: int = 2
+    input_mode: str = "dense"         # dense | categorical
+    atom_vocab: int = 128             # categorical mode
+    readout: str = "node"             # node | graph
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+
+
+def _gin_mlp_init(key, d_in, d_out):
+    k1, k2 = jax.random.split(key)
+    return {"l1": Dense.init(k1, d_in, d_out, kernel_init=initializers.he_normal),
+            "l2": Dense.init(k2, d_out, d_out, kernel_init=initializers.he_normal)}
+
+
+def _gin_mlp_apply(p, x):
+    return Dense.apply(p["l2"], jax.nn.relu(Dense.apply(p["l1"], x)))
+
+
+class GIN:
+    @staticmethod
+    def init(key, cfg: GINConfig, freqs=None):
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        d0 = cfg.d_in if cfg.input_mode == "dense" else cfg.d_hidden
+        layers = []
+        for i in range(cfg.n_layers):
+            d_in = d0 if i == 0 else cfg.d_hidden
+            layers.append({
+                "eps": jnp.zeros((), jnp.float32),   # learnable ε, init 0
+                "mlp": _gin_mlp_init(keys[i], d_in, cfg.d_hidden),
+            })
+        params = {"layers": layers,
+                  "head": Dense.init(keys[-1], cfg.d_hidden, cfg.n_classes)}
+        buffers = {}
+        if cfg.input_mode == "categorical":
+            comp = get_compressor(cfg.compressor)
+            if freqs is None:
+                freqs = np.ones((cfg.atom_vocab,), np.float64)
+            ep, eb = comp.init(keys[-2], cfg.atom_vocab, cfg.d_hidden, freqs,
+                               cfg.comp_cfg)
+            params["embedding"] = ep
+            buffers["embedding"] = eb
+        return params, buffers
+
+    @staticmethod
+    def apply(params, buffers, graph, cfg: GINConfig, *, train: bool = False,
+              step=None):
+        """graph: {x | atom_ids, edge_src, edge_dst, n_nodes(static),
+        edge_mask?, graph_ids?, n_graphs?} -> logits."""
+        if cfg.input_mode == "categorical":
+            comp = get_compressor(cfg.compressor)
+            h = comp.lookup(params["embedding"], buffers["embedding"],
+                            graph["atom_ids"], cfg.comp_cfg, train=train, step=step)
+        else:
+            h = graph["x"]
+        src, dst = graph["edge_src"], graph["edge_dst"]
+        n = h.shape[0]
+        emask = graph.get("edge_mask")
+        reg = jnp.zeros(())
+        if cfg.input_mode == "categorical":
+            comp = get_compressor(cfg.compressor)
+            reg = comp.reg_loss(params["embedding"], buffers.get("embedding", {}),
+                                cfg.comp_cfg)
+        for layer in params["layers"]:
+            msg = jnp.take(h, src, axis=0)                       # (E, d)
+            if emask is not None:
+                msg = msg * emask[:, None].astype(msg.dtype)
+            agg = jax.ops.segment_sum(msg, dst, num_segments=n)  # scatter-sum
+            h = _gin_mlp_apply(layer["mlp"], (1.0 + layer["eps"]) * h + agg)
+        if cfg.readout == "graph":
+            pooled = jax.ops.segment_sum(h, graph["graph_ids"],
+                                         num_segments=graph["n_graphs"])
+            return Dense.apply(params["head"], pooled), reg
+        return Dense.apply(params["head"], h), reg
+
+    @staticmethod
+    def loss_fn(params, buffers, graph, cfg: GINConfig, *, lam: float = 0.0,
+                train: bool = True, step=None):
+        """graph additionally carries {"labels", "label_mask"?} on nodes/graphs."""
+        logits, reg = GIN.apply(params, buffers, graph, cfg, train=train, step=step)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, graph["labels"][:, None], axis=-1)[:, 0]
+        if "label_mask" in graph:
+            m = graph["label_mask"].astype(jnp.float32)
+            ce = jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+        else:
+            ce = jnp.mean(ce)
+        return ce + lam * reg, ce

@@ -1,0 +1,3 @@
+from repro.models.lm.transformer import LM, LMConfig
+
+__all__ = ["LM", "LMConfig"]

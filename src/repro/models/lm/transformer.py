@@ -1,0 +1,366 @@
+"""Decoder-only LM covering every assigned transformer arch.
+
+One config class expresses: starcoder2-7b (GQA kv=4, RoPE), qwen3-32b
+(GQA kv=8, qk_norm), internlm2-1.8b (GQA kv=8), deepseek-moe-16b (2 shared +
+64 routed top-6 fine-grained MoE), grok-1-314b (8 experts top-2).
+
+Layers are scanned (stacked params) so HLO size is O(1) in depth — essential
+for the 64-layer archs' multi-pod dry-run — with optional per-layer remat.
+The token embedding is a pluggable compressor table: MPE applies to the
+Zipf-distributed vocab exactly as to CTR features (DESIGN.md §4); the LM head
+and transformer weights stay uncompressed (paper quantizes only embeddings).
+
+Decode: stacked KV caches {"k","v": (L, B, T_max, n_kv, hd), "len": ()};
+``apply`` with ``kv_caches`` runs one (or few) tokens against the cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.nn import init as initializers
+from repro.nn.attention import MHA, gqa_attention
+from repro.nn.moe import MoE, MoEConfig
+from repro.nn.norms import RMSNorm
+from repro.nn.rope import apply_rope
+
+
+class LMConfig(NamedTuple):
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: MoEConfig | None = None      # None => dense SwiGLU FFN
+    dtype: str = "float32"            # param/activation dtype ("bfloat16" at scale)
+    remat: bool = True
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+    embed_std: float = 0.02
+    # memory-bounded paths (nn/chunked.py) — required for the 32k/4k cells
+    attn_chunk_q: int = 0             # 0 => unchunked attention
+    attn_chunk_kv: int = 1024
+    ce_chunk: int = 0                 # 0 => unchunked cross-entropy
+    # sequence-shard attention activations (starcoder2: 36 heads ∤ 16 chips)
+    seq_shard_attn: bool = False
+    # §Perf: pin layer activations to the batch axes so GSPMD gathers weights,
+    # never the (tokens × d_model) activations (see dist.sharding.shard_batch_dim)
+    shard_activations: bool = False
+    # §Perf: expand K/V to query heads inside chunked attention so the head
+    # dim shards over "model" (see nn.chunked.chunked_gqa_attention)
+    attn_expand_kv: bool = False
+    # §Perf: bf16 attention blocks (fp32 softmax stats + accumulation)
+    attn_block_bf16: bool = False
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _layer_init(key, cfg: LMConfig):
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn": MHA.init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, qk_norm=cfg.qk_norm, dtype=dt),
+        "ln_attn": RMSNorm.init(None, cfg.d_model, dt),
+        "ln_ffn": RMSNorm.init(None, cfg.d_model, dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MoE.init(ks[1], cfg.moe, dtype=dt)
+    else:
+        k1, k2, k3 = jax.random.split(ks[1], 3)
+        p["ffn"] = {
+            "w_gate": initializers.he_normal(k1, (cfg.d_model, cfg.d_ff), dt),
+            "w_up": initializers.he_normal(k2, (cfg.d_model, cfg.d_ff), dt),
+            "w_down": initializers.he_normal(k3, (cfg.d_ff, cfg.d_model), dt),
+        }
+    return p
+
+
+class LM:
+    @staticmethod
+    def init(key, cfg: LMConfig, freqs=None):
+        dt = _dt(cfg)
+        ks = jax.random.split(key, 4)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((cfg.vocab,), np.float64)
+        ccfg = dict(cfg.comp_cfg or {})
+        ccfg.setdefault("embed_std", cfg.embed_std)
+        emb_params, emb_buffers = comp.init(ks[0], cfg.vocab, cfg.d_model,
+                                            freqs, ccfg)
+        # stacked per-layer params: every leaf gets a leading (L,) axis
+        layer_keys = jax.random.split(ks[1], cfg.n_layers)
+        layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+        params = {
+            "embedding": emb_params,
+            "layers": layers,
+            "ln_f": RMSNorm.init(None, cfg.d_model, dt),
+            "lm_head": initializers.normal(ks[2], (cfg.d_model, cfg.vocab),
+                                           std=0.02, dtype=dt),
+        }
+        buffers = {"embedding": emb_buffers}
+        return params, buffers
+
+    @staticmethod
+    def _layer_apply(cfg: LMConfig, x, layer_params, *, positions,
+                     cache_k=None, cache_v=None, cache_len=None,
+                     cache_k_scale=None, cache_v_scale=None):
+        """x: (B,S,d). Returns (x_out, aux_loss, new_cache_k, new_cache_v)."""
+        p = layer_params
+        if cfg.shard_activations:
+            from repro.dist.sharding import shard_batch_dim
+            x = shard_batch_dim(x)
+            p = LM._gather_fsdp_weights(p, cfg)
+        h = RMSNorm.apply(p["ln_attn"], x)
+        b, s, _ = h.shape
+        nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        from repro.nn.linear import Dense
+        q = Dense.apply(p["attn"]["wq"], h).reshape(b, s, nh, hd)
+        k = Dense.apply(p["attn"]["wk"], h).reshape(b, s, nkv, hd)
+        v = Dense.apply(p["attn"]["wv"], h).reshape(b, s, nkv, hd)
+        if cfg.qk_norm:
+            q = RMSNorm.apply(p["attn"]["q_norm"], q)
+            k = RMSNorm.apply(p["attn"]["k_norm"], k)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if cfg.seq_shard_attn and s > 1:
+            # context parallelism for head counts the mesh can't divide:
+            # shard S over "model"; the chunked softmax handles the rest.
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.sharding import maybe_shard
+            q = maybe_shard(q, P("data", "model", None, None))
+            k = maybe_shard(k, P("data", "model", None, None))
+            v = maybe_shard(v, P("data", "model", None, None))
+
+        new_ck = new_cv = None
+        if cache_k is not None:
+            if cache_k.dtype == jnp.int8:
+                # §Perf, paper-aligned: int8 KV cache (per-(batch,head) scales,
+                # dequant fused into the attention reads) — halves the
+                # decode-dominant KV traffic vs bf16.
+                kq = jnp.clip(jnp.round(k / cache_k_scale), -127, 127)
+                vq = jnp.clip(jnp.round(v / cache_v_scale), -127, 127)
+                new_ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache_k, kq.astype(jnp.int8), cache_len, axis=1)
+                new_cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache_v, vq.astype(jnp.int8), cache_len, axis=1)
+                k_att = new_ck.astype(_dt(cfg)) * cache_k_scale.astype(_dt(cfg))
+                v_att = new_cv.astype(_dt(cfg)) * cache_v_scale.astype(_dt(cfg))
+            else:
+                new_ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+                new_cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+                k_att, v_att = new_ck, new_cv
+            attn = gqa_attention(q, k_att, v_att, n_heads=nh, n_kv_heads=nkv,
+                                 causal=True, q_offset=cache_len,
+                                 kv_valid_len=cache_len + s)
+        elif cfg.attn_chunk_q and s > cfg.attn_chunk_q:
+            from repro.nn.chunked import chunked_gqa_attention
+            attn = chunked_gqa_attention(q, k, v, n_kv_heads=nkv, causal=True,
+                                         q_chunk=cfg.attn_chunk_q,
+                                         kv_chunk=cfg.attn_chunk_kv,
+                                         expand_kv=cfg.attn_expand_kv,
+                                         block_dtype=(jnp.bfloat16
+                                                      if cfg.attn_block_bf16
+                                                      else None))
+        else:
+            attn = gqa_attention(q, k, v, n_heads=nh, n_kv_heads=nkv, causal=True)
+        x = x + Dense.apply(p["attn"]["wo"], attn.reshape(b, s, nh * hd))
+
+        h = RMSNorm.apply(p["ln_ffn"], x)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            ff, aux = MoE.apply(p["moe"], h, cfg.moe)
+        else:
+            w = p["ffn"]
+            ff = (jax.nn.silu(h @ w["w_gate"]) * (h @ w["w_up"])) @ w["w_down"]
+        return x + ff, aux, new_ck, new_cv
+
+    @staticmethod
+    def _gather_fsdp_weights(p, cfg: LMConfig):
+        """§Perf: constrain layer weights to 'model'-only sharding inside the
+        scan body. The params live FSDP-sharded (d_model/d_ff over "data") in
+        HBM; this forces GSPMD to all-gather each layer's weights once per
+        layer — instead of its default of replicating the (tokens × d_model)
+        activations, which costs ~16× the bytes (EXPERIMENTS.md §Perf)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.sharding import current_dp_axes, maybe_shard
+        if current_dp_axes() is None:
+            return p
+        p = jax.tree.map(lambda x: x, p)  # shallow structural copy
+        attn = dict(p["attn"])
+        for k in ("wq", "wk", "wv"):
+            attn[k] = {"kernel": maybe_shard(p["attn"][k]["kernel"],
+                                             P(None, "model"))}
+        attn["wo"] = {"kernel": maybe_shard(p["attn"]["wo"]["kernel"],
+                                            P("model", None))}
+        for k in ("q_norm", "k_norm"):
+            if k in p["attn"]:
+                attn[k] = p["attn"][k]
+        p["attn"] = attn
+        if "ffn" in p:
+            p["ffn"] = {
+                "w_gate": maybe_shard(p["ffn"]["w_gate"], P(None, "model")),
+                "w_up": maybe_shard(p["ffn"]["w_up"], P(None, "model")),
+                "w_down": maybe_shard(p["ffn"]["w_down"], P("model", None)),
+            }
+        if "moe" in p:
+            moe = dict(p["moe"])
+            ep = cfg.moe.n_experts % 16 == 0
+            ex = p["moe"]["experts"]
+            if ep:  # experts stay sharded over model; gather the fsdp dim
+                moe["experts"] = {
+                    "w_gate": maybe_shard(ex["w_gate"], P("model", None, None)),
+                    "w_up": maybe_shard(ex["w_up"], P("model", None, None)),
+                    "w_down": maybe_shard(ex["w_down"], P("model", None, None)),
+                }
+            else:   # TP within experts over d_ff
+                moe["experts"] = {
+                    "w_gate": maybe_shard(ex["w_gate"], P(None, None, "model")),
+                    "w_up": maybe_shard(ex["w_up"], P(None, None, "model")),
+                    "w_down": maybe_shard(ex["w_down"], P(None, "model", None)),
+                }
+            if "shared" in p["moe"]:
+                sh = p["moe"]["shared"]
+                moe["shared"] = {
+                    "w_gate": maybe_shard(sh["w_gate"], P(None, "model")),
+                    "w_up": maybe_shard(sh["w_up"], P(None, "model")),
+                    "w_down": maybe_shard(sh["w_down"], P("model", None)),
+                }
+            p["moe"] = moe
+        return p
+
+    @staticmethod
+    def apply(params, buffers, tokens, cfg: LMConfig, *, positions=None,
+              kv_caches=None, train: bool = False, step=None):
+        """tokens: (B, S) -> (logits (B,S,V), aux_loss, new_kv_caches)."""
+        comp = get_compressor(cfg.compressor)
+        ccfg = dict(cfg.comp_cfg or {})
+        ccfg.setdefault("embed_std", cfg.embed_std)
+        x = comp.lookup(params["embedding"], buffers["embedding"], tokens,
+                        ccfg, train=train, step=step).astype(_dt(cfg))
+        if positions is None:
+            offset = kv_caches["len"] if kv_caches is not None else 0
+            positions = offset + jnp.arange(tokens.shape[1])[None, :]
+
+        cache_len = kv_caches["len"] if kv_caches is not None else None
+
+        quant_kv = kv_caches is not None and "k_scale" in kv_caches
+
+        def body(carry, xs):
+            h, aux = carry
+            if kv_caches is not None:
+                if quant_kv:
+                    lp, ck, cv, ks, vs = xs
+                else:
+                    lp, ck, cv = xs
+                    ks = vs = None
+                h, a, nck, ncv = LM._layer_apply(cfg, h, lp, positions=positions,
+                                                 cache_k=ck, cache_v=cv,
+                                                 cache_len=cache_len,
+                                                 cache_k_scale=ks,
+                                                 cache_v_scale=vs)
+                return (h, aux + a), (nck, ncv)
+            lp = xs
+            h, a, _, _ = LM._layer_apply(cfg, h, lp, positions=positions)
+            return (h, aux + a), None
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and kv_caches is None) else body
+        if kv_caches is None:
+            xs = params["layers"]
+        elif quant_kv:
+            xs = (params["layers"], kv_caches["k"], kv_caches["v"],
+                  kv_caches["k_scale"], kv_caches["v_scale"])
+        else:
+            xs = (params["layers"], kv_caches["k"], kv_caches["v"])
+        (x, aux), caches_out = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+
+        x = RMSNorm.apply(params["ln_f"], x)
+        logits = x @ params["lm_head"]
+        new_caches = None
+        if kv_caches is not None:
+            new_caches = {"k": caches_out[0], "v": caches_out[1],
+                          "len": kv_caches["len"] + tokens.shape[1]}
+            if quant_kv:
+                new_caches["k_scale"] = kv_caches["k_scale"]
+                new_caches["v_scale"] = kv_caches["v_scale"]
+        return logits, aux, new_caches
+
+    @staticmethod
+    def hidden_states(params, buffers, tokens, cfg: LMConfig, *, train=False,
+                      step=None):
+        """Final-layer hidden states (before the LM head) — big-vocab CE path."""
+        comp = get_compressor(cfg.compressor)
+        ccfg = dict(cfg.comp_cfg or {})
+        ccfg.setdefault("embed_std", cfg.embed_std)
+        x = comp.lookup(params["embedding"], buffers["embedding"], tokens,
+                        ccfg, train=train, step=step).astype(_dt(cfg))
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+        def body(carry, lp):
+            h, aux = carry
+            h, a, _, _ = LM._layer_apply(cfg, h, lp, positions=positions)
+            return (h, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        return RMSNorm.apply(params["ln_f"], x), aux
+
+    @staticmethod
+    def loss_fn(params, buffers, batch, cfg: LMConfig, *, aux_weight: float = 0.01,
+                train: bool = True, step=None):
+        """batch: {"tokens": (B,S), "labels": (B,S)} next-token CE."""
+        if cfg.ce_chunk:
+            from repro.nn.chunked import chunked_softmax_xent
+            x, aux = LM.hidden_states(params, buffers, batch["tokens"], cfg,
+                                      train=train, step=step)
+            ce = chunked_softmax_xent(x, params["lm_head"], batch["labels"],
+                                      chunk=cfg.ce_chunk)
+            return ce + aux_weight * aux, ce
+        logits, aux, _ = LM.apply(params, buffers, batch["tokens"], cfg,
+                                  train=train, step=step)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ce = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        return jnp.mean(ce) + aux_weight * aux, ce
+
+    @staticmethod
+    def make_kv_caches(cfg: LMConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16, prefill_len: int = 0,
+                       kv_scale_init: float = 0.05):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        caches = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                  "len": jnp.asarray(prefill_len, jnp.int32)}
+        if dtype == jnp.int8:
+            # §Perf, paper-aligned: int8 KV with per-(layer,batch,head) scales
+            sshape = (cfg.n_layers, batch, 1, cfg.n_kv_heads, 1)
+            caches["k_scale"] = jnp.full(sshape, kv_scale_init, jnp.float32)
+            caches["v_scale"] = jnp.full(sshape, kv_scale_init, jnp.float32)
+        return caches
+
+    @staticmethod
+    def decode_step(params, buffers, tokens, kv_caches, cfg: LMConfig):
+        """One-token serving step. tokens: (B, 1)."""
+        logits, _, new_caches = LM.apply(params, buffers, tokens, cfg,
+                                         kv_caches=kv_caches)
+        return logits[:, -1], new_caches
+
+    @staticmethod
+    def prefill(params, buffers, tokens, cfg: LMConfig, max_len: int,
+                cache_dtype=jnp.bfloat16):
+        """Prompt pass that fills fresh caches. tokens: (B, S)."""
+        caches = LM.make_kv_caches(cfg, tokens.shape[0], max_len, cache_dtype)
+        logits, _, caches = LM.apply(params, buffers, tokens, cfg, kv_caches=caches)
+        return logits[:, -1], caches

@@ -1,0 +1,115 @@
+"""SASRec [arXiv:1808.09781] — assigned config: d=50, 2 blocks, 1 head, S=50.
+
+Causal self-attention over the item sequence with a shared input/output item
+table; training uses the paper's per-position binary CE with one sampled
+negative. ``score_candidates`` does full-corpus scoring for retrieval cells
+(batched matmul against the — possibly dequantized — item table).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.nn import init as initializers
+from repro.nn.attention import MHA
+from repro.nn.linear import Dense
+from repro.nn.norms import LayerNorm
+
+
+class SASRecConfig(NamedTuple):
+    item_vocab: int = 1_000_000
+    d_embed: int = 50
+    seq_len: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    dropout: float = 0.0  # dropout omitted (BN-free small model; noted in DESIGN)
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+
+
+def _block_init(key, d, n_heads):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": LayerNorm.init(None, d),
+        "attn": MHA.init(k1, d, n_heads, head_dim=max(d // n_heads, 4)),
+        "ln2": LayerNorm.init(None, d),
+        "ff1": Dense.init(k2, d, d),
+        "ff2": Dense.init(k3, d, d),
+    }
+
+
+def _block_apply(p, x, n_heads, d):
+    hd = max(d // n_heads, 4)
+    h = LayerNorm.apply(p["ln1"], x)
+    a, _ = MHA.apply(p["attn"], h, n_heads=n_heads, n_kv_heads=n_heads,
+                     head_dim=hd, causal=True, rope_theta=None)
+    x = x + a
+    h = LayerNorm.apply(p["ln2"], x)
+    return x + Dense.apply(p["ff2"], jax.nn.relu(Dense.apply(p["ff1"], h)))
+
+
+class SASRec:
+    @staticmethod
+    def init(key, cfg: SASRecConfig, freqs=None):
+        keys = jax.random.split(key, 2 + cfg.n_blocks)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((cfg.item_vocab,), np.float64)
+        emb_params, emb_buffers = comp.init(keys[0], cfg.item_vocab, cfg.d_embed,
+                                            freqs, cfg.comp_cfg)
+        params = {
+            "embedding": emb_params,
+            "pos": initializers.normal(keys[1], (cfg.seq_len, cfg.d_embed), std=0.02),
+            "blocks": [_block_init(keys[2 + i], cfg.d_embed, cfg.n_heads)
+                       for i in range(cfg.n_blocks)],
+            "ln_f": LayerNorm.init(None, cfg.d_embed),
+        }
+        buffers = {"embedding": emb_buffers}
+        state = {}
+        return params, buffers, state
+
+    @staticmethod
+    def encode(params, buffers, seq_ids, cfg: SASRecConfig, *,
+               train: bool = False, step=None):
+        """seq_ids: (B, S) -> hidden states (B, S, d)."""
+        comp = get_compressor(cfg.compressor)
+        x = comp.lookup(params["embedding"], buffers["embedding"], seq_ids,
+                        cfg.comp_cfg, train=train, step=step)
+        x = x + params["pos"][None]
+        for blk in params["blocks"]:
+            x = _block_apply(blk, x, cfg.n_heads, cfg.d_embed)
+        return LayerNorm.apply(params["ln_f"], x)
+
+    @staticmethod
+    def loss_fn(params, buffers, state, batch, cfg: SASRecConfig, *,
+                lam: float = 0.0, train: bool = True, step=None):
+        """batch: seq_ids, pos_ids, neg_ids (B,S), mask (B,S) valid positions."""
+        comp = get_compressor(cfg.compressor)
+        h = SASRec.encode(params, buffers, batch["seq_ids"], cfg,
+                          train=train, step=step)               # (B, S, d)
+        pos = comp.lookup(params["embedding"], buffers["embedding"],
+                          batch["pos_ids"], cfg.comp_cfg, train=train, step=step)
+        neg = comp.lookup(params["embedding"], buffers["embedding"],
+                          batch["neg_ids"], cfg.comp_cfg, train=train, step=step)
+        pos_logit = jnp.sum(h * pos, axis=-1)
+        neg_logit = jnp.sum(h * neg, axis=-1)
+        mask = batch["mask"].astype(jnp.float32)
+        ce = (jnp.log1p(jnp.exp(-pos_logit)) + jnp.log1p(jnp.exp(neg_logit)))
+        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
+        return ce + lam * reg, (state, ce)
+
+    @staticmethod
+    def score_candidates(params, buffers, seq_ids, cand_ids, cfg: SASRecConfig,
+                         *, top_k: int = 100):
+        """seq_ids: (B,S); cand_ids: (C,) -> top-k over the candidate corpus."""
+        comp = get_compressor(cfg.compressor)
+        h = SASRec.encode(params, buffers, seq_ids, cfg, train=False)[:, -1]  # (B,d)
+        cand = comp.lookup(params["embedding"], buffers["embedding"], cand_ids,
+                           cfg.comp_cfg, train=False)            # (C, d)
+        scores = h @ cand.T                                      # (B, C)
+        return tuple(jax.lax.top_k(scores, top_k))

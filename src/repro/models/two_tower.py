@@ -1,0 +1,114 @@
+"""Two-tower retrieval [Yi et al., RecSys'19] — assigned config:
+embed_dim=256 (dot space = tower output), tower MLP 1024-512-256.
+
+One global id-embedding table spans user + item fields (so MPE's global
+frequency grouping applies across both); each tower concatenates its field
+embeddings and maps them through its MLP. Training uses in-batch sampled
+softmax with logQ correction; ``retrieval_score`` scores one query against a
+candidate corpus with a single batched matmul (no loop).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.embeddings.table import field_offsets, total_vocab
+from repro.nn.mlp import MLP
+
+
+class TwoTowerConfig(NamedTuple):
+    user_fields: tuple
+    item_fields: tuple
+    d_embed: int = 64                   # id-table dim (tower input granularity)
+    tower_hidden: tuple = (1024, 512, 256)  # last = dot-space dim 256
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+    temperature: float = 0.05
+    use_batchnorm: bool = True
+
+
+class TwoTower:
+    @staticmethod
+    def init(key, cfg: TwoTowerConfig, freqs=None):
+        fields = (*cfg.user_fields, *cfg.item_fields)
+        n = total_vocab(fields)
+        keys = jax.random.split(key, 3)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((n,), np.float64)
+        emb_params, emb_buffers = comp.init(keys[0], n, cfg.d_embed, freqs, cfg.comp_cfg)
+        fu, fi = len(cfg.user_fields), len(cfg.item_fields)
+        params = {
+            "embedding": emb_params,
+            "user_mlp": MLP.init(keys[1], fu * cfg.d_embed, cfg.tower_hidden,
+                                 use_batchnorm=cfg.use_batchnorm),
+            "item_mlp": MLP.init(keys[2], fi * cfg.d_embed, cfg.tower_hidden,
+                                 use_batchnorm=cfg.use_batchnorm),
+        }
+        offsets = field_offsets(fields)
+        buffers = {
+            "embedding": emb_buffers,
+            "user_offsets": jnp.asarray(offsets[:fu]),
+            "item_offsets": jnp.asarray(offsets[fu:]),
+        }
+        state = {
+            "user_mlp": MLP.init_state(cfg.tower_hidden, use_batchnorm=cfg.use_batchnorm),
+            "item_mlp": MLP.init_state(cfg.tower_hidden, use_batchnorm=cfg.use_batchnorm),
+        }
+        return params, buffers, state
+
+    @staticmethod
+    def _tower(which, params, buffers, state, ids, cfg, *, train, step):
+        comp = get_compressor(cfg.compressor)
+        gids = ids + buffers[f"{which}_offsets"][None, :]
+        emb = comp.lookup(params["embedding"], buffers["embedding"], gids,
+                          cfg.comp_cfg, train=train, step=step)
+        b = emb.shape[0]
+        out, new_state = MLP.apply(params[f"{which}_mlp"], state[f"{which}_mlp"],
+                                   emb.reshape(b, -1), train=train)
+        # L2-normalized dot space (standard for sampled-softmax retrieval)
+        out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+        return out, new_state
+
+    @staticmethod
+    def user_tower(params, buffers, state, user_ids, cfg, *, train=False, step=None):
+        return TwoTower._tower("user", params, buffers, state, user_ids, cfg,
+                               train=train, step=step)
+
+    @staticmethod
+    def item_tower(params, buffers, state, item_ids, cfg, *, train=False, step=None):
+        return TwoTower._tower("item", params, buffers, state, item_ids, cfg,
+                               train=train, step=step)
+
+    @staticmethod
+    def loss_fn(params, buffers, state, batch, cfg: TwoTowerConfig, *,
+                lam: float = 0.0, train: bool = True, step=None):
+        """In-batch sampled softmax with logQ correction.
+
+        batch: user_ids (B,Fu), item_ids (B,Fi), item_logq (B,) log sampling prob.
+        """
+        u, su = TwoTower.user_tower(params, buffers, state, batch["user_ids"],
+                                    cfg, train=train, step=step)
+        v, si = TwoTower.item_tower(params, buffers, state, batch["item_ids"],
+                                    cfg, train=train, step=step)
+        logits = (u @ v.T) / cfg.temperature                 # (B, B)
+        if "item_logq" in batch:
+            logits = logits - batch["item_logq"][None, :]    # logQ correction
+        labels = jnp.arange(logits.shape[0])
+        ce = jnp.mean(-jax.nn.log_softmax(logits, axis=-1)[labels, labels])
+        comp = get_compressor(cfg.compressor)
+        reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
+        return ce + lam * reg, ({"user_mlp": su, "item_mlp": si}, ce)
+
+    @staticmethod
+    def retrieval_score(params, buffers, state, user_ids, cand_item_ids, cfg,
+                        *, top_k: int = 100, step=None):
+        """user_ids: (1, Fu); cand_item_ids: (C, Fi) -> (scores, indices) top-k."""
+        u, _ = TwoTower.user_tower(params, buffers, state, user_ids, cfg, train=False)
+        v, _ = TwoTower.item_tower(params, buffers, state, cand_item_ids, cfg, train=False)
+        scores = (v @ u[0]) / cfg.temperature                # (C,)
+        return tuple(jax.lax.top_k(scores, top_k))

@@ -1,0 +1,75 @@
+"""Wide & Deep [arXiv:1606.07792] — assigned config: n_sparse=40, d=32,
+MLP 1024-512-256, interaction=concat.
+
+Wide part: per-feature scalar weights (a d=1 embedding) over the raw sparse
+ids. Deep part: concat field embeddings -> MLP. The d=32 table is compressed
+by the pluggable compressor (MPE's home regime).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import get_compressor
+from repro.embeddings.table import field_offsets, total_vocab
+from repro.nn.mlp import MLP
+
+
+class WideDeepConfig(NamedTuple):
+    fields: tuple
+    d_embed: int = 32
+    mlp_hidden: tuple = (1024, 512, 256)
+    compressor: str = "plain"
+    comp_cfg: dict | None = None
+    use_batchnorm: bool = True
+
+
+class WideDeep:
+    @staticmethod
+    def init(key, cfg: WideDeepConfig, freqs=None):
+        n = total_vocab(cfg.fields)
+        f = len(cfg.fields)
+        keys = jax.random.split(key, 3)
+        comp = get_compressor(cfg.compressor)
+        if freqs is None:
+            freqs = np.ones((n,), np.float64)
+        emb_params, emb_buffers = comp.init(keys[0], n, cfg.d_embed, freqs, cfg.comp_cfg)
+        params = {
+            "embedding": emb_params,
+            "wide": jnp.zeros((n,), jnp.float32),
+            "wide_bias": jnp.zeros((), jnp.float32),
+            "mlp": MLP.init(keys[1], f * cfg.d_embed, cfg.mlp_hidden, d_out=1,
+                            use_batchnorm=cfg.use_batchnorm),
+        }
+        buffers = {"embedding": emb_buffers,
+                   "offsets": jnp.asarray(field_offsets(cfg.fields))}
+        state = {"mlp": MLP.init_state(cfg.mlp_hidden, use_batchnorm=cfg.use_batchnorm)}
+        return params, buffers, state
+
+    @staticmethod
+    def apply(params, buffers, state, batch, cfg: WideDeepConfig, *,
+              train: bool = False, step=None):
+        comp = get_compressor(cfg.compressor)
+        gids = batch["ids"] + buffers["offsets"][None, :]
+        emb = comp.lookup(params["embedding"], buffers["embedding"], gids,
+                          cfg.comp_cfg, train=train, step=step)       # (B, F, d)
+        b, f, d = emb.shape
+        deep, new_mlp = MLP.apply(params["mlp"], state["mlp"],
+                                  emb.reshape(b, f * d), train=train)
+        wide = jnp.sum(jnp.take(params["wide"], gids, axis=0), axis=1)
+        logit = deep[:, 0] + wide + params["wide_bias"]
+        reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
+        return logit, {"mlp": new_mlp}, reg
+
+    @staticmethod
+    def loss_fn(params, buffers, state, batch, cfg: WideDeepConfig, *,
+                lam: float = 0.0, train: bool = True, step=None):
+        logits, new_state, reg = WideDeep.apply(params, buffers, state, batch,
+                                                cfg, train=train, step=step)
+        y = batch["label"].astype(jnp.float32)
+        ce = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                      + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return ce + lam * reg, (new_state, ce)

@@ -1,0 +1,20 @@
+"""Pure-JAX neural-network substrate (the environment has no flax/optax).
+
+Every layer is a namespace of two functions:
+
+    init(key, ...)   -> params   (a nested dict pytree)
+    apply(params, x) -> y
+
+Params are plain dict pytrees so they compose with pjit shardings, our
+optimizer, and checkpointing without any framework machinery.
+"""
+from repro.nn import init as initializers
+from repro.nn.linear import Dense
+from repro.nn.mlp import MLP
+from repro.nn.norms import LayerNorm, RMSNorm, BatchNorm
+from repro.nn.module import param_count, param_bytes, tree_cast, flatten_with_names
+
+__all__ = [
+    "initializers", "Dense", "MLP", "LayerNorm", "RMSNorm", "BatchNorm",
+    "param_count", "param_bytes", "tree_cast", "flatten_with_names",
+]

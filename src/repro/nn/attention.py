@@ -1,0 +1,125 @@
+"""Multi-head attention with GQA, RoPE, optional qk-norm, and a KV cache.
+
+One module serves every arch in the pool: the LM transformers use GQA + RoPE
+(+ qk_norm for qwen3), BST/SASRec use small full/causal MHA with learned
+positions (positions=None disables RoPE).
+
+Decode: ``kv_cache`` is a dict {"k": (B, S_max, n_kv, hd), "v": ..., "len": ()}
+holding past keys/values; apply() writes the new token(s) at position ``len``
+and attends over the valid prefix. Shapes stay static — serving-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.linear import Dense
+from repro.nn.norms import RMSNorm
+from repro.nn.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+class MHA:
+    @staticmethod
+    def init(key, d_model: int, n_heads: int, n_kv_heads: int | None = None,
+             head_dim: int | None = None, *, qk_norm: bool = False,
+             dtype=jnp.float32):
+        n_kv = n_kv_heads or n_heads
+        hd = head_dim or d_model // n_heads
+        ks = jax.random.split(key, 4)
+        params = {
+            "wq": Dense.init(ks[0], d_model, n_heads * hd, use_bias=False, dtype=dtype),
+            "wk": Dense.init(ks[1], d_model, n_kv * hd, use_bias=False, dtype=dtype),
+            "wv": Dense.init(ks[2], d_model, n_kv * hd, use_bias=False, dtype=dtype),
+            "wo": Dense.init(ks[3], n_heads * hd, d_model, use_bias=False, dtype=dtype),
+        }
+        if qk_norm:
+            params["q_norm"] = RMSNorm.init(None, hd, dtype)
+            params["k_norm"] = RMSNorm.init(None, hd, dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
+              causal: bool = True, rope_theta: float | None = 10000.0,
+              positions=None, kv_cache=None, attn_mask=None):
+        """x: (B, S, d). Returns (out (B, S, d), new_kv_cache | None)."""
+        b, s, _ = x.shape
+        hd, n_kv = head_dim, n_kv_heads
+        q = Dense.apply(params["wq"], x).reshape(b, s, n_heads, hd)
+        k = Dense.apply(params["wk"], x).reshape(b, s, n_kv, hd)
+        v = Dense.apply(params["wv"], x).reshape(b, s, n_kv, hd)
+
+        if "q_norm" in params:  # qwen3-style per-head RMS qk-norm
+            q = RMSNorm.apply(params["q_norm"], q)
+            k = RMSNorm.apply(params["k_norm"], k)
+
+        if kv_cache is not None:
+            offset = kv_cache["len"]
+        else:
+            offset = 0
+        if positions is None:
+            positions = offset + jnp.arange(s)[None, :]  # (1, S)
+        if rope_theta is not None:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+
+        new_cache = None
+        if kv_cache is not None:
+            ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k.astype(kv_cache["k"].dtype), offset, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v.astype(kv_cache["v"].dtype), offset, axis=1)
+            new_cache = {"k": ck, "v": cv, "len": offset + s}
+            k, v = ck, cv  # attend over the whole (masked) cache
+
+        out = gqa_attention(q, k, v, n_heads=n_heads, n_kv_heads=n_kv,
+                            causal=causal, q_offset=offset,
+                            kv_valid_len=(None if kv_cache is None else offset + s),
+                            attn_mask=attn_mask)
+        out = out.reshape(b, s, n_heads * hd)
+        return Dense.apply(params["wo"], out), new_cache
+
+
+def gqa_attention(q, k, v, *, n_heads: int, n_kv_heads: int, causal: bool,
+                  q_offset=0, kv_valid_len=None, attn_mask=None):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd) -> (B,S,Hq,hd).
+
+    Grouped-query: each of the Hq/Hkv query groups attends to one kv head.
+    Softmax in fp32 regardless of input dtype.
+    """
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    group = hq // n_kv_heads
+    qg = q.reshape(b, s, n_kv_heads, group, hd)
+    scale = hd ** -0.5
+    # read K/V at their stored dtype (bf16 caches stay bf16 in HBM — halves
+    # decode cache traffic); accumulate in fp32 via preferred_element_type
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+
+    mask = None
+    if causal:
+        q_pos = q_offset + jnp.arange(s)[:, None]
+        k_pos = jnp.arange(t)[None, :]
+        mask = k_pos <= q_pos                             # (S, T)
+    if kv_valid_len is not None:
+        valid = jnp.arange(t)[None, :] < kv_valid_len     # (1, T) or (S,T)
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if attn_mask is not None:  # (B, S, T) extra mask (padding etc.)
+        logits = jnp.where(attn_mask[:, None, None], logits, NEG_INF)
+
+    probs = jax.nn.softmax(logits, axis=-1)  # fp32 statistics
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def make_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16, prefill_len: int = 0):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "len": jnp.asarray(prefill_len, jnp.int32),
+    }

@@ -1,0 +1,131 @@
+"""Memory-bounded attention and cross-entropy for long sequences / big vocabs.
+
+``chunked_gqa_attention`` is blockwise (flash-style) attention in pure JAX:
+an online-softmax scan over KV chunks nested in a map over Q chunks, so the
+materialized score block is (q_chunk × kv_chunk) instead of (S × T). This is
+what lets the 32k-prefill and 4k-train cells fit HBM without a fused kernel —
+XLA fuses the inner block into a tight loop, and under pjit the scan works
+with any KV sharding (softmax statistics combine exactly like
+flash-decoding's partial-max/denominator trick).
+
+``chunked_softmax_xent`` scans the sequence axis when computing logits×CE for
+151k-vocab LM heads, so the (tokens × vocab) logit tensor never exists in
+full; jax.checkpoint on the chunk body keeps the backward at one chunk too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_gqa_attention(q, k, v, *, n_kv_heads: int, causal: bool,
+                          q_offset=0, kv_valid_len=None,
+                          q_chunk: int = 512, kv_chunk: int = 1024,
+                          expand_kv: bool = False,
+                          block_dtype=None):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd) -> (B,S,Hq,hd). fp32 softmax.
+
+    expand_kv (§Perf): repeat K/V up to the query-head count so the head dim
+    is mesh-divisible and pinned to "model". Without it, the grouped 5-D
+    reshape defeats GSPMD's head-sharding propagation and every device
+    computes all heads (measured 16× redundant compute+bytes on qwen3 —
+    EXPERIMENTS.md §Perf iteration 2). Costs Hq/Hkv× more K/V bytes, which the
+    sharding reclaims.
+    """
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    if expand_kv and hq != n_kv_heads:
+        rep = hq // n_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        n_kv_heads = hq
+    group = hq // n_kv_heads
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    nq, nk = s // q_chunk, t // kv_chunk
+    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, t, q_chunk, kv_chunk)
+
+    scale = hd ** -0.5
+    # §Perf: blocks may stay bf16 (block_dtype) — the matmuls accumulate in
+    # fp32 via preferred_element_type and softmax statistics remain fp32, so
+    # only the stored block tensors (the HBM traffic) shrink 2×.
+    bd = block_dtype or jnp.float32
+    qr = q.reshape(b, nq, q_chunk, n_kv_heads, group, hd).astype(bd)
+    kr = k.reshape(b, nk, kv_chunk, n_kv_heads, hd).astype(bd)
+    vr = v.reshape(b, nk, kv_chunk, n_kv_heads, hd).astype(bd)
+    if expand_kv:
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.sharding import current_dp_axes, maybe_shard
+        dp = current_dp_axes()
+        if dp is not None:
+            qr = maybe_shard(qr, P(dp, None, None, "model", None, None))
+            kr = maybe_shard(kr, P(dp, None, None, "model", None))
+            vr = maybe_shard(vr, P(dp, None, None, "model", None))
+
+    def q_block(qi, qb):
+        """qb: (b, q_chunk, kv, g, hd) -> attention output for this q block."""
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            acc, m, denom = carry
+            ki, kb, vb = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgh,bckh->bkgqc", qb, kb,
+                                preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if kv_valid_len is not None:
+                mask &= (k_pos < kv_valid_len)[None, :]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            new_m = jnp.maximum(m, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m - new_m)
+            p = jnp.exp(logits - new_m[..., None])
+            denom = denom * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bckh->bkgqh", p.astype(bd), vb,
+                preferred_element_type=jnp.float32)
+            return (acc, new_m, denom), None
+
+        acc0 = jnp.zeros((b, n_kv_heads, group, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, n_kv_heads, group, q_chunk), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, n_kv_heads, group, q_chunk), jnp.float32)
+        (acc, _, denom), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, d0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))        # (b, qc, kv, g, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, hd)
+    return out.astype(q.dtype)
+
+
+def chunked_softmax_xent(x, lm_head, labels, *, chunk: int = 512):
+    """x: (B,S,d) final hidden; lm_head: (d,V); labels: (B,S) -> mean CE.
+
+    Scans S in chunks; the (B, chunk, V) logits block is the only vocab-sized
+    intermediate, re-materialized in backward via checkpoint.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xr = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def step(tot, inputs):
+        xc, lc = inputs
+        logits = xc @ lm_head
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ce = -jnp.take_along_axis(logp, lc[..., None], axis=-1)
+        return tot + jnp.sum(ce), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xr, lr))
+    return tot / (b * s)

@@ -1,0 +1,47 @@
+"""Parameter initializers.
+
+The paper initializes embeddings from N(0, 3e-3) (§5.1.5); dense layers use
+glorot-uniform like the reference implementations of DNN/DCN/DeepFM/IPNN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMBED_STD = 3e-3  # paper §5.1.5
+
+
+def normal(key, shape, std=EMBED_STD, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def glorot_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fans(shape)
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def he_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fans(shape)
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def _fans(shape):
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for s in shape[:-2]:
+        receptive *= s
+    return shape[-2] * receptive, shape[-1] * receptive

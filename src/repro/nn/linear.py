@@ -1,0 +1,22 @@
+"""Dense layer."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from repro.nn import init as initializers
+
+
+class Dense:
+    @staticmethod
+    def init(key, d_in: int, d_out: int, *, use_bias: bool = True,
+             kernel_init=initializers.glorot_uniform, dtype=jnp.float32):
+        params = {"kernel": kernel_init(key, (d_in, d_out), dtype=dtype)}
+        if use_bias:
+            params["bias"] = jnp.zeros((d_out,), dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x):
+        y = x @ params["kernel"]
+        if "bias" in params:
+            y = y + params["bias"]
+        return y

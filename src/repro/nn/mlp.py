@@ -1,0 +1,49 @@
+"""MLP tower used by every DLRM backbone (paper §5.1.5: 1024-512-256).
+
+Supports optional BatchNorm between layers (paper's recipe) and a final
+projection to ``d_out`` (logit head) when requested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.linear import Dense
+from repro.nn.norms import BatchNorm
+
+
+class MLP:
+    @staticmethod
+    def init(key, d_in: int, hidden: tuple, *, d_out: int | None = None,
+             use_batchnorm: bool = True, dtype=jnp.float32):
+        dims = [d_in, *hidden]
+        keys = jax.random.split(key, len(hidden) + 1)
+        layers = [Dense.init(keys[i], dims[i], dims[i + 1], dtype=dtype)
+                  for i in range(len(hidden))]
+        params = {"layers": layers}
+        if use_batchnorm:
+            params["bn"] = [BatchNorm.init(None, h, dtype) for h in hidden]
+        if d_out is not None:
+            params["head"] = Dense.init(keys[-1], dims[-1], d_out, dtype=dtype)
+        return params
+
+    @staticmethod
+    def init_state(hidden: tuple, *, use_batchnorm: bool = True, dtype=jnp.float32):
+        if not use_batchnorm:
+            return {}
+        return {"bn": [BatchNorm.init_state(h, dtype) for h in hidden]}
+
+    @staticmethod
+    def apply(params, state, x, *, train: bool = False, act=jax.nn.relu):
+        new_bn = []
+        for i, layer in enumerate(params["layers"]):
+            x = Dense.apply(layer, x)
+            if "bn" in params:
+                x, s = BatchNorm.apply(params["bn"][i], state["bn"][i], x, train=train)
+                new_bn.append(s)
+            x = act(x)
+        if "head" in params:
+            x = Dense.apply(params["head"], x)
+        new_state = {"bn": new_bn} if "bn" in params else {}
+        return x, new_state

@@ -1,0 +1,43 @@
+"""Pytree utilities for the dict-based parameter system."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def param_count(params) -> int:
+    """Total number of scalars in a param pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    """Total bytes of a param pytree at its current dtypes."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_cast(params, dtype):
+    """Cast every floating leaf to ``dtype`` (ints/bools untouched)."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, params)
+
+
+def flatten_with_names(params, prefix: str = ""):
+    """Yield (dotted_name, leaf) pairs for a nested-dict pytree."""
+    if isinstance(params, dict):
+        for k in sorted(params):
+            yield from flatten_with_names(params[k], f"{prefix}{k}." if prefix or True else k)
+    else:
+        yield prefix.rstrip("."), params
+
+
+def tree_zeros_like(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves (for grad clipping / logging)."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,73 @@
+"""Normalization layers: LayerNorm, RMSNorm, BatchNorm (with running stats).
+
+BatchNorm is required by the paper's training recipe (§5.1.5, "Batch
+Normalization is used to ensure stable training"). Running statistics live in
+a separate ``state`` pytree (functional style), returned alongside outputs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class LayerNorm:
+    @staticmethod
+    def init(key, dim: int, dtype=jnp.float32):
+        del key
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+    @staticmethod
+    def apply(params, x, eps: float = 1e-5):
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mean) / jnp.sqrt(var + eps)
+        return y * params["scale"] + params["bias"]
+
+
+class RMSNorm:
+    @staticmethod
+    def init(key, dim: int, dtype=jnp.float32):
+        del key
+        return {"scale": jnp.ones((dim,), dtype)}
+
+    @staticmethod
+    def apply(params, x, eps: float = 1e-6):
+        # compute in fp32 for stability then cast back (LLaMA/Qwen convention)
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * (1.0 / jnp.sqrt(ms + eps))
+        return (y * params["scale"]).astype(dtype)
+
+
+class BatchNorm:
+    """Functional BatchNorm1d over the last axis.
+
+    state = {"mean": (d,), "var": (d,), "count": ()}; apply returns
+    (y, new_state) in training mode, y alone in eval mode.
+    """
+    MOMENTUM = 0.9
+
+    @staticmethod
+    def init(key, dim: int, dtype=jnp.float32):
+        del key
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+    @staticmethod
+    def init_state(dim: int, dtype=jnp.float32):
+        return {"mean": jnp.zeros((dim,), dtype), "var": jnp.ones((dim,), dtype)}
+
+    @staticmethod
+    def apply(params, state, x, *, train: bool, eps: float = 1e-5):
+        if train:
+            axes = tuple(range(x.ndim - 1))
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            new_state = {
+                "mean": BatchNorm.MOMENTUM * state["mean"] + (1 - BatchNorm.MOMENTUM) * mean,
+                "var": BatchNorm.MOMENTUM * state["var"] + (1 - BatchNorm.MOMENTUM) * var,
+            }
+        else:
+            mean, var = state["mean"], state["var"]
+            new_state = state
+        y = (x - mean) / jnp.sqrt(var + eps) * params["scale"] + params["bias"]
+        return y, new_state

@@ -1,0 +1,4 @@
+from repro.train.optimizer import adam, sgd, clip_by_global_norm, chain_weight_decay
+from repro.train.metrics import auc, logloss
+
+__all__ = ["adam", "sgd", "clip_by_global_norm", "chain_weight_decay", "auc", "logloss"]

@@ -1,0 +1,67 @@
+"""Gradient compression for cross-pod all-reduce (DESIGN.md §5).
+
+At 1000+ nodes the pod-to-pod DCN link is the thin pipe; int8 quantization
+with error feedback [1-bit Adam lineage, arXiv:1606.06160 / arXiv:2102.02888]
+cuts cross-pod gradient bytes 4× with provably-bounded bias: the residual of
+each quantization is carried into the next step, so the compressed series
+telescopes to the true gradient sum.
+
+Embedding gradients are additionally row-sparse (only touched rows are
+nonzero); ``rowsparse_compress`` ships (row_idx, values) instead of the dense
+table — the natural format for MPE-scale tables.
+
+The numerics here are exercised by unit tests and wired into the Trainer via
+``grad_transform``; on real multi-pod hardware the same functions run inside a
+shard_map over the "pod" axis around the DCN all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jnp.ndarray, err: jnp.ndarray):
+    """Quantize g+err to int8 with a per-tensor scale. Returns (q, scale, new_err)."""
+    target = g + err
+    scale = jnp.max(jnp.abs(target)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, target - deq
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_transform():
+    """Stateful grad transform: tree of residuals threaded by the caller.
+
+        ef_state = init_error_feedback(grads_template)
+        grads, ef_state = apply_error_feedback(grads, ef_state)
+    """
+    def init(grads_template):
+        return jax.tree.map(jnp.zeros_like, grads_template)
+
+    def apply(grads, ef_state):
+        def one(g, e):
+            q, s, new_e = int8_compress(g, e)
+            return int8_decompress(q, s), new_e
+        pairs = jax.tree.map(one, grads, ef_state)
+        new_grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda p: p[1], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_grads, new_state
+
+    return init, apply
+
+
+def rowsparse_compress(grad_table: jnp.ndarray, touched_rows: jnp.ndarray):
+    """Embedding-table grads: ship only touched rows (idx, values)."""
+    vals = jnp.take(grad_table, touched_rows, axis=0)
+    return touched_rows, vals
+
+
+def rowsparse_decompress(n_rows: int, idx: jnp.ndarray, vals: jnp.ndarray):
+    out = jnp.zeros((n_rows, vals.shape[-1]), vals.dtype)
+    return out.at[idx].add(vals)

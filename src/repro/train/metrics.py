@@ -1,0 +1,41 @@
+"""Evaluation metrics: AUC (rank-based Mann-Whitney) and logloss.
+
+AUC is computed jit-ably from sorted scores so it can run on-device over large
+eval shards; ties are handled with average ranks (matches sklearn on CTR data).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logloss(labels: jnp.ndarray, probs: jnp.ndarray, eps: float = 1e-7) -> jnp.ndarray:
+    p = jnp.clip(probs, eps, 1 - eps)
+    return -jnp.mean(labels * jnp.log(p) + (1 - labels) * jnp.log(1 - p))
+
+
+def auc(labels: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
+    """Mann-Whitney U AUC with average-rank tie handling."""
+    labels = labels.astype(jnp.float32).reshape(-1)
+    scores = scores.astype(jnp.float32).reshape(-1)
+    n = scores.shape[0]
+    order = jnp.argsort(scores)
+    sorted_scores = scores[order]
+    sorted_labels = labels[order]
+    ranks = jnp.arange(1, n + 1, dtype=jnp.float32)
+    # average ranks for ties: group by unique score via segment mean
+    is_new = jnp.concatenate([jnp.ones((1,), bool),
+                              sorted_scores[1:] != sorted_scores[:-1]])
+    group_id = jnp.cumsum(is_new) - 1
+    group_sum = jax.ops.segment_sum(ranks, group_id, num_segments=n)
+    group_cnt = jax.ops.segment_sum(jnp.ones_like(ranks), group_id, num_segments=n)
+    avg_rank = (group_sum / jnp.maximum(group_cnt, 1.0))[group_id]
+    n_pos = jnp.sum(sorted_labels)
+    n_neg = n - n_pos
+    sum_pos_ranks = jnp.sum(avg_rank * sorted_labels)
+    u = sum_pos_ranks - n_pos * (n_pos + 1) / 2.0
+    return jnp.where((n_pos == 0) | (n_neg == 0), 0.5, u / jnp.maximum(n_pos * n_neg, 1.0))
+
+
+def binary_accuracy(labels, probs, threshold: float = 0.5):
+    return jnp.mean((probs > threshold).astype(jnp.float32) == labels)

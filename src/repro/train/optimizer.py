@@ -1,0 +1,127 @@
+"""Optimizers (the environment has no optax — built here).
+
+API mirrors optax's GradientTransformation so call-sites read familiarly:
+
+    opt = adam(1e-3, weight_decay=3e-6)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+
+Paper recipe (§5.1.5): Adam, lr=1e-3, weight decay in {0, 3e-6} depending on
+the dataset.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0,
+         moment_dtype=None) -> GradientTransformation:
+    """Adam/AdamW. ``lr`` may be a float or a schedule fn(step)->float.
+
+    Decoupled weight decay (AdamW-style); decay is skipped automatically for
+    1-D leaves (biases / norm scales) following common practice.
+
+    ``moment_dtype`` (§Perf, paper-aligned): store mu/nu in a reduced dtype
+    (bf16). Halves optimizer-state memory and HBM traffic — what makes
+    314B-param Adam fit 256×16 GB chips, and cuts the per-step moment
+    read/write for 10⁷–10⁹-row embedding tables. Update math stays fp32.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _stored(x):
+        return x.astype(moment_dtype) if (moment_dtype is not None and
+                                          jnp.issubdtype(x.dtype, jnp.floating)) \
+            else x
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: _stored(jnp.zeros_like(p)), params),
+            "nu": jax.tree.map(lambda p: _stored(jnp.zeros_like(p)), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree.map(
+            lambda m, g: _stored(b1 * m.astype(jnp.float32)
+                                 + (1 - b1) * g.astype(jnp.float32)),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: _stored(b2 * v.astype(jnp.float32)
+                                 + (1 - b2) * jnp.square(g.astype(jnp.float32))),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            u = -lr_t * (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay and p.ndim > 1:
+                u = u - lr_t * weight_decay * p
+            return u
+
+        updates = jax.tree.map(_upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return GradientTransformation(init, update)
+
+
+def sgd(lr, momentum: float = 0.0) -> GradientTransformation:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step}
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def chain_weight_decay(grads, params, wd: float):
+    """L2 (coupled) weight decay added to grads, matrices only."""
+    return jax.tree.map(
+        lambda g, p: g + wd * p if p.ndim > 1 else g, grads, params)
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (base_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,74 @@
+"""Builder factories binding models + compressors for the MPE pipeline,
+benchmarks, tests and examples.
+
+A builder is ``build(key, compressor, comp_cfg) -> bundle`` with
+bundle = {"params", "buffers", "state", "loss_fn", "eval_fn"}; loss_fn follows
+the Trainer signature (params, buffers, state, batch, *, step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.models.wide_deep import WideDeep, WideDeepConfig
+from repro.train.metrics import auc, logloss
+
+
+def _ctr_eval(apply_fn, eval_batches):
+    def eval_fn(params, buffers, state):
+        scores, labels = [], []
+        for b in eval_batches:
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            logits, _, _ = apply_fn(params, buffers, state, batch)
+            scores.append(np.asarray(jax.nn.sigmoid(logits)))
+            labels.append(np.asarray(batch["label"]))
+        s = np.concatenate(scores); l = np.concatenate(labels)
+        return {"auc": float(auc(jnp.asarray(l), jnp.asarray(s))),
+                "logloss": float(logloss(jnp.asarray(l, jnp.float32),
+                                         jnp.asarray(s)))}
+    return eval_fn
+
+
+def dlrm_builder(base: DLRMConfig, freqs, *, lam: float = 0.0,
+                 eval_batches=None):
+    """Returns build(key, compressor, comp_cfg)."""
+    def build(key, compressor: str, comp_cfg):
+        cfg = base._replace(compressor=compressor, comp_cfg=comp_cfg)
+        params, buffers, state = DLRM.init(key, cfg, freqs=freqs)
+
+        def loss_fn(p, bu, st, batch, *, step=None):
+            return DLRM.loss_fn(p, bu, st, batch, cfg, lam=lam, train=True,
+                                step=step)
+
+        def apply_eval(p, bu, st, batch):
+            return DLRM.apply(p, bu, st, batch, cfg, train=False)
+
+        return {"params": params, "buffers": buffers, "state": state,
+                "loss_fn": loss_fn, "cfg": cfg,
+                "eval_fn": (None if eval_batches is None
+                            else _ctr_eval(apply_eval, eval_batches))}
+    return build
+
+
+def wide_deep_builder(base: WideDeepConfig, freqs, *, lam: float = 0.0,
+                      eval_batches=None):
+    def build(key, compressor: str, comp_cfg):
+        cfg = base._replace(compressor=compressor, comp_cfg=comp_cfg)
+        params, buffers, state = WideDeep.init(key, cfg, freqs=freqs)
+
+        def loss_fn(p, bu, st, batch, *, step=None):
+            return WideDeep.loss_fn(p, bu, st, batch, cfg, lam=lam, train=True,
+                                    step=step)
+
+        def apply_eval(p, bu, st, batch):
+            return WideDeep.apply(p, bu, st, batch, cfg, train=False)
+
+        return {"params": params, "buffers": buffers, "state": state,
+                "loss_fn": loss_fn, "cfg": cfg,
+                "eval_fn": (None if eval_batches is None
+                            else _ctr_eval(apply_eval, eval_batches))}
+    return build

@@ -1,0 +1,98 @@
+"""Interface + semantic tests for the Table-3 baseline compressors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_compressor
+
+CASES = [
+    ("plain", {}, 1.0),
+    ("lsq", {"bits": 6}, 6 / 32),
+    ("lsq", {"bits": 4}, 4 / 32),
+    ("alpt", {"bits": 8}, 8 / 32),
+    ("qr", {"k": 2}, None),
+    ("pep", {}, None),
+    ("optfs", {"total_steps": 100}, None),
+    ("mpe_search", None, None),
+]
+
+
+@pytest.mark.parametrize("name,cfg,ratio", CASES)
+def test_interface(name, cfg, ratio, rng):
+    C = get_compressor(name)
+    key = jax.random.PRNGKey(0)
+    freqs = rng.zipf(1.3, 512).astype(np.float64)
+    p, b = C.init(key, 512, 16, freqs, cfg)
+    ids = jnp.asarray(rng.integers(0, 512, (64, 4)))
+    out = C.lookup(p, b, ids, cfg, train=True, step=jnp.asarray(5))
+    assert out.shape == (64, 4, 16)
+    assert np.isfinite(np.asarray(out)).all()
+    r = C.storage_ratio(p, b, cfg)
+    if ratio is not None:
+        assert abs(r - ratio) < 1e-6
+    assert 0.0 <= r <= 1.01
+    # grads exist and are finite
+    g = jax.grad(lambda pp: jnp.sum(
+        C.lookup(pp, b, ids, cfg, train=True, step=jnp.asarray(5)) ** 2))(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_alpt_stays_on_grid(rng):
+    """ALPT invariant: after post_update the table is exactly b-bit valued."""
+    C = get_compressor("alpt")
+    cfg = {"bits": 8}
+    p, b = C.init(jax.random.PRNGKey(0), 256, 8, None, cfg)
+    # simulate an optimizer perturbation off-grid
+    p = dict(p, emb=p["emb"] + 1e-4 * jax.random.normal(jax.random.PRNGKey(1),
+                                                        p["emb"].shape))
+    p = C.post_update(p, b, cfg, jax.random.PRNGKey(2))
+    v = np.asarray(p["emb"]) / float(p["alpha"])
+    np.testing.assert_allclose(v, np.round(v), atol=1e-4)
+    assert v.min() >= -128 and v.max() <= 127
+
+
+def test_qr_compression_is_half(rng):
+    C = get_compressor("qr")
+    p, b = C.init(jax.random.PRNGKey(0), 10_000, 16, None, {"k": 2})
+    assert abs(C.storage_ratio(p, b, {"k": 2}) - 0.5) < 1e-3
+    # quotient sharing: ids 2k and 2k+1 share the quotient row
+    e0 = C.lookup(p, b, jnp.asarray([[0]]), {"k": 2})
+    e1 = C.lookup(p, b, jnp.asarray([[1]]), {"k": 2})
+    q = np.asarray(p["quot"][0])
+    r0, r1 = np.asarray(p["rem"][0]), np.asarray(p["rem"][1])
+    np.testing.assert_allclose(np.asarray(e0)[0, 0], q * r0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e1)[0, 0], q * r1, rtol=1e-6)
+
+
+def test_optfs_gates_harden_at_eval(rng):
+    C = get_compressor("optfs")
+    cfg = {"total_steps": 100}
+    p, b = C.init(jax.random.PRNGKey(0), 64, 8, None, cfg)
+    p = dict(p, gate_logit=jnp.asarray(rng.normal(0, 2, (64,)), jnp.float32))
+    ids = jnp.arange(64).reshape(1, -1)
+    out = C.lookup(p, b, ids, cfg, train=False)
+    closed = np.asarray(p["gate_logit"]) <= 0
+    np.testing.assert_array_equal(np.asarray(out)[0, closed], 0.0)
+
+
+def test_pep_prunes_below_threshold(rng):
+    C = get_compressor("pep")
+    p, b = C.init(jax.random.PRNGKey(0), 64, 8, None, {})
+    p = dict(p, thresh_logit=jnp.full((8,), 0.0))  # sigmoid = 0.5 threshold
+    ids = jnp.arange(64).reshape(1, -1)
+    out = np.asarray(C.lookup(p, b, ids, {}))
+    emb = np.asarray(p["emb"])
+    np.testing.assert_array_equal(out[0][np.abs(emb) <= 0.5], 0.0)
+
+
+def test_packed_compressor_lookup(rng):
+    C = get_compressor("packed")
+    cfg = {"bits": (0, 1, 2, 3, 4, 5, 6), "d": 8, "n": 256}
+    p, b = C.init(jax.random.PRNGKey(0), 256, 8, rng.zipf(1.3, 256), cfg)
+    ids = jnp.asarray(rng.integers(0, 256, (32,)))
+    out = C.lookup(p, b, ids, cfg)
+    assert out.shape == (32, 8)
+    assert np.isfinite(np.asarray(out)).all()
+    assert C.storage_ratio(p, b, cfg) < 0.5

@@ -1,0 +1,38 @@
+"""Structural validation of every dry-run cell: specs and shardings must have
+matching pytree structure, and pspec ranks must match array ranks. The real
+lower+compile runs in launch/dryrun.py (512 fake devices); this guards the
+cell definitions cheaply on 1 device."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_arch
+from repro.launch.cells import build_cell
+
+CELLS = [(a, s) for a in ALL_ARCHS() for s in get_arch(a).shapes]
+
+
+@pytest.mark.parametrize("arch_id,shape", CELLS,
+                         ids=[f"{a}-{s}" for a, s in CELLS])
+def test_cell_structure(arch_id, shape):
+    cell = build_cell(arch_id, shape, multi_pod=False)
+    assert len(cell.input_specs) == len(cell.in_pspecs)
+    for spec_tree, ps_tree in zip(cell.input_specs, cell.in_pspecs):
+        specs = jax.tree.leaves(spec_tree)
+        pspecs = jax.tree.leaves(ps_tree,
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert len(specs) == len(pspecs), (
+            f"{cell.name}: {len(specs)} arrays vs {len(pspecs)} pspecs")
+        for sd, ps in zip(specs, pspecs):
+            assert isinstance(ps, P), (cell.name, ps)
+            assert len(ps) <= max(sd.ndim, 1), (cell.name, sd.shape, ps)
+            # divisibility: named axes must divide the dim (16 per axis)
+            for dim, axes in zip(sd.shape, ps):
+                if axes is None:
+                    continue
+                axes = (axes,) if isinstance(axes, str) else axes
+                size = 1
+                for ax in axes:
+                    size *= {"pod": 2, "data": 16, "model": 16}[ax]
+                assert dim % size == 0 or dim >= size, (
+                    f"{cell.name}: dim {dim} not shardable by {axes}")

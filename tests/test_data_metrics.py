@@ -1,0 +1,102 @@
+"""Data generators + metrics."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.graphs import NeighborSampler, csr_from_edges, make_sbm_graph
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.data.tokens import TokenStream
+from repro.embeddings.frequency import zipf_frequencies
+from repro.train.metrics import auc, logloss
+
+
+def test_ctr_determinism_and_elasticity(rng):
+    spec = CTRSpec(field_vocabs=(500, 300), batch_size=128, seed=3)
+    ds = SyntheticCTR(spec)
+    a, b = ds.batch(7), ds.batch(7)
+    np.testing.assert_array_equal(a["ids"], b["ids"])
+    # different host shards differ (elastic resharding key)
+    c = ds.batch(7, host_id=1, n_hosts=2)
+    assert (a["ids"] != c["ids"]).any()
+
+
+def test_ctr_positive_ratio():
+    spec = CTRSpec(field_vocabs=(2000, 1000, 500), batch_size=8192)
+    ds = SyntheticCTR(spec)
+    ratio = np.mean([ds.batch(i)["label"].mean() for i in range(4)])
+    assert 0.15 < ratio < 0.40  # Criteo-like (25.6%)
+
+
+def test_ctr_signal_learnable():
+    spec = CTRSpec(field_vocabs=(2000, 1000), batch_size=8192)
+    ds = SyntheticCTR(spec)
+    b = ds.batch(0)
+    z = ds.true_logit(b["ids"].astype(np.int64))
+    p = 1 / (1 + np.exp(-z))
+    # the planted ground truth must have real AUC against its own labels
+    a = float(auc(jnp.asarray(b["label"], jnp.float32), jnp.asarray(p)))
+    assert a > 0.70
+
+
+def test_zipf_frequencies_normalized():
+    f = zipf_frequencies(1000, 1.1)
+    assert abs(f.sum() - 1.0) < 1e-9
+    assert f[0] > f[-1]
+
+
+def test_sampler_edges_point_child_to_parent(rng):
+    g = make_sbm_graph(300, 2000, 4, 3, seed=0)
+    csr = csr_from_edges(g["edge_src"].astype(np.int64),
+                         g["edge_dst"].astype(np.int64), 300)
+    ns = NeighborSampler(csr, (4, 2), seed=0)
+    seeds = np.arange(10)
+    sub = ns.sample(seeds)
+    n_exp, e_exp = NeighborSampler.output_sizes(10, (4, 2))
+    assert sub["node_ids"].shape == (n_exp,)
+    assert sub["edge_src"].shape == (e_exp,)
+    # hop-1 edges: children (positions 10..50) -> parents (0..10)
+    assert (sub["edge_dst"][:40] < 10).all()
+    assert (sub["edge_src"][:40] >= 10).all() and (sub["edge_src"][:40] < 50).all()
+    # sampled neighbor ids must be real neighbors where mask is set
+    for e in range(40):
+        if sub["edge_mask"][e]:
+            child_pos = sub["edge_src"][e]
+            parent_pos = sub["edge_dst"][e]
+            child_gid = sub["node_ids"][child_pos]
+            parent_gid = sub["node_ids"][parent_pos]
+            nbrs = csr.indices[csr.indptr[parent_gid]:csr.indptr[parent_gid + 1]]
+            assert child_gid in nbrs
+
+
+def test_token_stream_shapes_and_zipf():
+    ts = TokenStream(1000, 4, 32, seed=0)
+    b = ts.batch_at(0)
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_auc_against_quadratic_reference(rng):
+    labels = rng.integers(0, 2, 500).astype(np.float32)
+    scores = rng.normal(0, 1, 500) + labels  # informative
+    a = float(auc(jnp.asarray(labels), jnp.asarray(scores)))
+    # O(n^2) reference (ties broken by 0.5)
+    pos = scores[labels == 1][:, None]
+    neg = scores[labels == 0][None, :]
+    ref = (np.sum(pos > neg) + 0.5 * np.sum(pos == neg)) / (pos.size * neg.size / 1)
+    ref = (np.sum(pos > neg) + 0.5 * np.sum(pos == neg)) / (
+        (labels == 1).sum() * (labels == 0).sum())
+    np.testing.assert_allclose(a, ref, atol=1e-6)
+
+
+def test_auc_with_ties(rng):
+    labels = jnp.asarray([0, 1, 0, 1], jnp.float32)
+    scores = jnp.asarray([0.5, 0.5, 0.5, 0.5])
+    assert abs(float(auc(labels, scores)) - 0.5) < 1e-6
+
+
+def test_logloss():
+    labels = jnp.asarray([1.0, 0.0])
+    probs = jnp.asarray([0.9, 0.1])
+    expected = -np.mean([np.log(0.9), np.log(0.9)])
+    np.testing.assert_allclose(float(logloss(labels, probs)), expected,
+                               rtol=1e-5)

@@ -1,0 +1,80 @@
+"""Flash attention Pallas kernel vs exact-softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.nn.attention import gqa_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,bq,bk", [(32, 8, 8), (64, 16, 32), (64, 64, 64)])
+def test_flash_matches_oracle(s, bq, bk, causal):
+    q = jax.random.normal(KEY, (3, s, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (3, s, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (3, s, 16))
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_gqa_wrapper_matches_module():
+    q = jax.random.normal(KEY, (2, 32, 8, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 32, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 32, 4, 16))
+    ref = gqa_attention(q, k, v, n_heads=8, n_kv_heads=4, causal=True)
+    out = flash_attention_kernel(q, k, v, bq=8, bk=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_backward_matches_autodiff(causal):
+    from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
+                                                      flash_attention_fwd_stats)
+    q = jax.random.normal(KEY, (3, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 64, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (3, 64, 16))
+    do = jax.random.normal(jax.random.fold_in(KEY, 3), q.shape)
+    o, lse = flash_attention_fwd_stats(q, k, v, causal=causal, bq=16, bk=16)
+    grads = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                bq=16, bk=16)
+    ref = jax.grad(lambda *a: jnp.sum(flash_attention_ref(*a, causal=causal)
+                                      * do), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(grads, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_flash_custom_vjp_end_to_end():
+    q = jax.random.normal(KEY, (2, 32, 8, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 32, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 32, 4, 16))
+    gk = jax.grad(lambda *a: jnp.sum(
+        flash_attention_kernel(*a, bq=8, bk=8) ** 2), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(
+        gqa_attention(*a, n_heads=8, n_kv_heads=4, causal=True) ** 2),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 999), hd=st.sampled_from([8, 16, 32]))
+def test_flash_property_sweep(seed, hd):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (2, 32, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 32, hd))
+    out = flash_attention_pallas(q, k, v, causal=True, bq=16, bk=16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-5, atol=5e-5)

@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp refs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, quantizer
+from repro.core.mpe import MPEConfig
+from repro.kernels.mpe_lookup.kernel import packed_lookup_pallas
+from repro.kernels.mpe_lookup.ref import packed_lookup_ref
+from repro.kernels.mpe_qat.ops import mixed_expectation_kernel
+from repro.kernels.mpe_qat.ref import mixed_expectation_ref
+from repro.kernels.embedding_bag.ops import embedding_bag_kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+BITS = MPEConfig().bits
+
+
+@pytest.mark.parametrize("b", [1, 2, 3, 4, 5, 6, 7, 8])
+@pytest.mark.parametrize("d", [8, 16, 50, 64])
+def test_lookup_kernel_matches_ref(b, d, rng):
+    n_b, p_b = quantizer.int_bounds(b)
+    codes = rng.integers(n_b, p_b + 1, (64, d)).astype(np.int32)
+    words = packing.pack_codes(jnp.asarray(codes), b)
+    ids = jnp.asarray(rng.integers(0, 64, (33,)), jnp.int32)
+    alpha = jnp.float32(0.01)
+    beta = jnp.asarray(rng.normal(0, 1e-3, d), jnp.float32)
+    k = packed_lookup_pallas(ids, words, alpha, beta, b=b, d=d)
+    r = packed_lookup_ref(ids, words, alpha, beta, b=b, d=d)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_rows=st.integers(8, 600), d=st.sampled_from([16, 32]),
+       seed=st.integers(0, 999))
+def test_qat_kernel_sweep(n_rows, d, seed):
+    rng = np.random.default_rng(seed)
+    m = len(BITS)
+    rows = jnp.asarray(rng.normal(0, 3e-3, (n_rows, d)), jnp.float32)
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(0, 1, (n_rows, m)),
+                                       jnp.float32), -1)
+    alpha = jnp.asarray([quantizer.init_alpha(3e-3, b) for b in BITS])
+    beta = jnp.asarray(rng.normal(0, 1e-4, (d,)), jnp.float32)
+    out_k = mixed_expectation_kernel(rows, probs, alpha, beta, BITS)
+    out_r = mixed_expectation_ref(rows, probs, alpha, beta, bits=BITS)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_qat_kernel_grads_match_ref(rng):
+    m = len(BITS)
+    rows = jnp.asarray(rng.normal(0, 3e-3, (300, 16)), jnp.float32)
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(0, 1, (300, m)), jnp.float32), -1)
+    alpha = jnp.asarray([quantizer.init_alpha(3e-3, b) for b in BITS])
+    beta = jnp.asarray(rng.normal(0, 1e-4, (16,)), jnp.float32)
+
+    def lk(r, p, a, be):
+        return jnp.sum(jnp.sin(mixed_expectation_kernel(r, p, a, be, BITS)))
+
+    def lr(r, p, a, be):
+        return jnp.sum(jnp.sin(mixed_expectation_ref(r, p, a, be, bits=BITS)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2, 3))(rows, probs, alpha, beta)
+    gr = jax.grad(lr, argnums=(0, 1, 2, 3))(rows, probs, alpha, beta)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("shape", [(4, 3, 16), (16, 7, 32), (8, 1, 8)])
+def test_embedding_bag_kernel(shape, dtype, rng):
+    b, l, d = shape
+    tab = jnp.asarray(rng.normal(0, 1, (200, d)), dtype)
+    ids = jnp.asarray(rng.integers(0, 200, (b, l)))
+    mask = jnp.asarray(rng.random((b, l)) < 0.8)
+    k = embedding_bag_kernel(tab, ids, mask)
+    r = embedding_bag_ref(tab, ids, mask)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_embedding_bag_grad(rng):
+    tab = jnp.asarray(rng.normal(0, 1, (100, 16)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 100, (8, 5)))
+    mask = jnp.ones((8, 5), bool)
+    gk = jax.grad(lambda t: jnp.sum(embedding_bag_kernel(t, ids, mask) ** 2))(tab)
+    gr = jax.grad(lambda t: jnp.sum(embedding_bag_ref(t, ids, mask) ** 2))(tab)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,36 @@
+"""Property tests for bit-level packing (paper §4, TPU uint32 layout)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.quantizer import int_bounds
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 8), d=st.integers(1, 96), n=st.integers(1, 40),
+       seed=st.integers(0, 2**16))
+def test_pack_unpack_roundtrip(b, d, n, seed):
+    rng = np.random.default_rng(seed)
+    n_b, p_b = int_bounds(b)
+    codes = rng.integers(n_b, p_b + 1, (n, d)).astype(np.int32)
+    words = packing.pack_codes(jnp.asarray(codes), b)
+    assert words.shape == (n, packing.words_per_row(d, b))
+    back = packing.unpack_codes(words, b, d)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@given(b=st.integers(1, 8), d=st.integers(1, 128))
+@settings(max_examples=40, deadline=None)
+def test_words_per_row_is_tight(b, d):
+    w = packing.words_per_row(d, b)
+    assert w * 32 >= d * b
+    assert (w - 1) * 32 < d * b
+
+
+def test_packed_density():
+    """Packed size ≈ d·b bits (no byte-alignment waste beyond the last word)."""
+    d, b, n = 64, 3, 1000
+    w = packing.words_per_row(d, b)
+    assert w == 6  # 192 bits / 32
+    assert w * 32 - d * b <= 31

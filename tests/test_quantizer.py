@@ -1,0 +1,95 @@
+"""Unit + property tests for the LSQ+ quantizer (paper Eqs. 2, 4-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer
+
+
+@pytest.mark.parametrize("b", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_codes_within_bounds(b, rng):
+    theta = jnp.asarray(rng.normal(0, 0.01, (128, 16)), jnp.float32)
+    codes = quantizer.quantize_codes(theta, 0.002, jnp.zeros((16,)), b)
+    n_b, p_b = quantizer.int_bounds(b)
+    assert codes.min() >= n_b and codes.max() <= p_b
+
+
+@pytest.mark.parametrize("b", [2, 4, 6])
+def test_idempotent(b, rng):
+    """Quantizing an already-quantized tensor is the identity."""
+    theta = jnp.asarray(rng.normal(0, 0.01, (64, 8)), jnp.float32)
+    alpha, beta = jnp.float32(0.003), jnp.asarray(rng.normal(0, 1e-3, (8,)), jnp.float32)
+    q1 = quantizer.lsq_quantize(theta, alpha, beta, b)
+    q2 = quantizer.lsq_quantize(q1, alpha, beta, b)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=0, atol=1e-6)
+
+
+def test_ste_theta_gradient_mask(rng):
+    """Eq. 4: dQ/dθ is 1 strictly inside the clamp range, 0 outside."""
+    b = 3
+    alpha = jnp.float32(0.01)
+    beta = jnp.zeros((4,))
+    theta = jnp.asarray([[0.001, 0.02, -0.05, 0.035]], jnp.float32)
+    g = jax.grad(lambda t: jnp.sum(quantizer.lsq_quantize(t, alpha, beta, b)))(theta)
+    n_b, p_b = quantizer.int_bounds(b)   # [-4, 3]
+    v = np.asarray(theta) / 0.01         # [0.1, 2.0, -5.0, 3.5]
+    expected = ((v > n_b) & (v < p_b)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(g), expected)
+
+
+def test_alpha_gradient_matches_eq5(rng):
+    b = 2
+    n_b, p_b = quantizer.int_bounds(b)
+    alpha = jnp.float32(0.01)
+    beta = jnp.zeros(())
+    theta = jnp.asarray([0.001, -0.5, 0.5, 0.013], jnp.float32)
+    g = jax.grad(lambda a: jnp.sum(quantizer.lsq_quantize(theta, a, beta, b)),
+                 argnums=0)(alpha)
+    v = np.asarray(theta) / 0.01
+    per = np.where(v <= n_b, n_b, np.where(v >= p_b, p_b, np.round(v) - v))
+    np.testing.assert_allclose(float(g), per.sum(), rtol=1e-5)
+
+
+def test_beta_gradient_matches_eq6(rng):
+    b = 2
+    alpha = jnp.float32(0.01)
+    beta = jnp.zeros((2,))
+    theta = jnp.asarray([[0.001, -0.5]], jnp.float32)  # inside, below
+    g = jax.grad(lambda bt: jnp.sum(quantizer.lsq_quantize(theta, alpha, bt, b)),
+                 argnums=0)(beta)
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 8), scale=st.floats(1e-4, 1e-1),
+       seed=st.integers(0, 2**16))
+def test_quantization_error_bounded(b, scale, seed):
+    """Inside the clamp range, |Q(θ)-θ| <= α/2 (uniform quantizer property)."""
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(0, scale, (64,)), jnp.float32)
+    alpha = jnp.float32(2 * scale / max(1, 2 ** (b - 1)))
+    q = quantizer.lsq_quantize(theta, alpha, jnp.zeros(()), b)
+    n_b, p_b = quantizer.int_bounds(b)
+    v = np.asarray(theta) / float(alpha)
+    inside = (v > n_b) & (v < p_b)
+    err = np.abs(np.asarray(q) - np.asarray(theta))
+    assert (err[inside] <= float(alpha) / 2 + 1e-6).all()
+
+
+def test_mixed_expectation_prob_weighting(rng):
+    """Eq. 9: with a one-hot p the mixture equals the single quantizer."""
+    bits = (0, 1, 2, 3, 4, 5, 6)
+    rows = jnp.asarray(rng.normal(0, 3e-3, (32, 8)), jnp.float32)
+    alpha = jnp.asarray([quantizer.init_alpha(3e-3, b) for b in bits])
+    beta = jnp.zeros((8,))
+    for i, b in enumerate(bits):
+        probs = jax.nn.one_hot(jnp.full((32,), i), len(bits))
+        out = quantizer.mixed_expectation(rows, probs, alpha, beta, bits)
+        if b == 0:
+            np.testing.assert_array_equal(np.asarray(out), 0.0)
+        else:
+            ref = quantizer.lsq_quantize(rows, alpha[i], beta, b)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-6)
