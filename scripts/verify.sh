@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): full test run plus a collection-only
+# smoke so import-graph breakage (a module importing a symbol that doesn't
+# exist yet) fails fast instead of hiding behind collection errors.
+#
+# Usage: scripts/verify.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection smoke (zero import errors required) =="
+python -m pytest --collect-only -q >/dev/null
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"

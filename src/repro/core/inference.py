@@ -26,14 +26,34 @@ def _pad_rows(n: int, multiple: int) -> int:
     return max(multiple, -(-n // multiple) * multiple)
 
 
+def _auto_pad_multiple(n: int, n_widths: int, cap: int = 512) -> int:
+    """Largest power-of-two ≤ ``cap`` whose worst-case total padding
+    (``multiple`` rows per non-empty subtable) stays under n/8 rows.
+
+    512 at production scale — every mesh axis combination divides it, so row
+    shards stay even — but a small table (tests, offline export) would drown
+    in 512-row padding, so the multiple scales down (≥ 8, the sublane width).
+    """
+    m = 8
+    while m < cap and m * 2 * n_widths * 8 <= n:
+        m *= 2
+    return m
+
+
 def build_packed_table(emb, bits_idx_per_feature, alpha, beta, cfg: MPEConfig,
-                       row_pad_multiple: int = 512):
+                       row_pad_multiple: int | None = None):
     """Quantize + pack a trained table.
 
     Returns a dict pytree ``table`` plus a static metadata dict.
+    ``row_pad_multiple`` defaults to a size-aware power of two (see
+    ``_auto_pad_multiple``); pass 512 explicitly to force production mesh
+    alignment on a small table.
     """
     emb = np.asarray(emb)
     bits_idx = np.asarray(bits_idx_per_feature)
+    if row_pad_multiple is None:
+        n_widths = sum(1 for b in cfg.bits if b != 0)
+        row_pad_multiple = _auto_pad_multiple(emb.shape[0], n_widths)
     alpha_np = np.asarray(alpha)
     beta_np = np.asarray(beta)
     n, d = emb.shape

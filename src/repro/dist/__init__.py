@@ -1,0 +1,24 @@
+"""Distribution layer: mesh registry + partition-spec vocabulary.
+
+``repro.dist.mesh`` owns the context-managed current-mesh registry;
+``repro.dist.sharding`` defines the partition-spec contract for every
+workload family in-tree (LM params/caches, recsys embedding tables, MPE
+packed serving tables) plus the in-model constraint helpers
+(``maybe_shard``/``shard_batch_dim``) that degrade to no-ops on one device.
+"""
+from repro.dist.mesh import (current_mesh, host_mesh, make_device_mesh,
+                             use_mesh)
+from repro.dist.sharding import (cell_shardings, current_dp_axes, dp_axes,
+                                 lm_batch_pspecs, lm_cache_pspecs,
+                                 lm_param_pspecs, maybe_shard,
+                                 packed_table_pspecs, recsys_table_pspecs,
+                                 replicate_like, shard_batch_dim,
+                                 tree_named_shardings)
+
+__all__ = [
+    "use_mesh", "current_mesh", "make_device_mesh", "host_mesh",
+    "dp_axes", "current_dp_axes", "maybe_shard", "shard_batch_dim",
+    "tree_named_shardings", "replicate_like", "cell_shardings",
+    "lm_batch_pspecs", "lm_cache_pspecs", "lm_param_pspecs",
+    "recsys_table_pspecs", "packed_table_pspecs",
+]

@@ -1,0 +1,74 @@
+"""Context-managed current-mesh registry.
+
+The model code never takes a mesh argument: layers ask ``repro.dist.sharding``
+for the active mesh at trace time and pin activations with
+``with_sharding_constraint`` only when one is installed. ``use_mesh`` is the
+single entry point — it pushes onto a process-local stack *and* enters jax's
+own mesh context so bare-``PartitionSpec`` constraints resolve too.
+
+Importing this module must never touch jax device state (the smoke tests run
+on 1 CPU device; only launch/dryrun.py forces 512 virtual devices).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+_MESH_STACK: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Install ``mesh`` as the current mesh for the dynamic extent.
+
+    Nestable; the innermost mesh wins. Also enters the jax mesh context so
+    library code using bare PartitionSpecs under pjit keeps working.
+    """
+    _MESH_STACK.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh() -> Mesh | None:
+    """The innermost ``use_mesh`` mesh, else jax's own ambient mesh, else None."""
+    if _MESH_STACK:
+        return _MESH_STACK[-1]
+    try:  # a plain `with mesh:` entered outside repro.dist still counts
+        from jax._src.mesh import thread_resources
+        env_mesh = thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:  # noqa: BLE001 — internal API; absence means "no mesh"
+        pass
+    return None
+
+
+def make_device_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mesh:
+    """Mesh over the available devices (prod 16×16 / 2×16×16, tests 1×N CPU)."""
+    try:
+        return jax.make_mesh(shape, axis_names)
+    except AttributeError:  # older jax: build the device grid by hand
+        from jax.experimental import mesh_utils
+        return Mesh(mesh_utils.create_device_mesh(shape), axis_names)
+
+
+def host_mesh(n_data: int | None = None, n_model: int = 1) -> Mesh:
+    """("data", "model") mesh over host devices — the test-time mesh.
+
+    Defaults to all visible devices on the data axis. Under
+    ``--xla_force_host_platform_device_count=4`` this yields a real 4-way
+    mesh; on a stock single-device CPU it is a 1×1 mesh, on which every
+    constraint in ``repro.dist.sharding`` is a no-op.
+    """
+    devs = jax.devices()
+    if n_data is None:
+        n_data = len(devs) // n_model
+    grid = np.asarray(devs[: n_data * n_model]).reshape(n_data, n_model)
+    return Mesh(grid, ("data", "model"))

@@ -1,0 +1,214 @@
+"""Partition-spec contract for every workload family on the production mesh.
+
+Mesh axes: ``("data", "model")`` single-pod (16×16 TPU v5e), with a leading
+``"pod"`` axis (2×16×16) multi-pod. Three pspec families:
+
+  LM       — params FSDP-style (last dim over "model", second-to-last over
+             "data"); token batches over the data axes; KV caches with the
+             sequence dim over "model" (batch over data when batch > 1).
+  recsys   — (n, d) embedding tables row-sharded over ``rows_axes`` (vocab
+             rows are the dominant bytes); γ/α/β side params and the MLP
+             stay replicated.
+  MPE pack — one bit-packed uint32 subtable per candidate width, each
+             row-sharded over ``rows_axes``. Rows are padded to multiples of
+             512 (``core.inference._pad_rows``), so row shards stay aligned
+             to the packed-row groups of ``core/packing.py`` — the uint32
+             words of one embedding row never split across devices (codes
+             straddle word boundaries; a row is only decodable whole).
+
+In-model helpers (``maybe_shard``, ``shard_batch_dim``, ``current_dp_axes``)
+read the registry in ``repro.dist.mesh`` at trace time and degrade to no-ops
+when no mesh (or a single-device mesh) is active, so the same model code runs
+unmodified in 1-device tests and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.mesh import current_mesh
+
+# Production axis sizes (launch/mesh.py): only dims divisible by these are
+# assigned a mesh axis — everything else stays replicated, which keeps every
+# pspec valid on any submesh (1×1 test mesh included).
+PROD_AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+def dp_axes(multi_pod: bool = False) -> tuple[str, ...]:
+    """The data-parallel (batch) axes of the production mesh."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def current_dp_axes() -> tuple[str, ...] | None:
+    """Batch axes of the active mesh, or None when sharding is a no-op."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return None
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    return dp or None
+
+
+# ---------------------------------------------------------------------------
+# constraint helpers (trace-time no-ops without a multi-device mesh)
+# ---------------------------------------------------------------------------
+
+def _axes_size(mesh, entry) -> int:
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def _fit_spec(shape, spec, mesh):
+    """Drop pspec entries whose axes are unknown to ``mesh`` or don't divide
+    the dim — a constraint we can't honor cleanly becomes "replicated"."""
+    fitted = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            fitted.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        if not all(n in mesh.shape for n in names):
+            fitted.append(None)
+            continue
+        fitted.append(entry if dim % _axes_size(mesh, entry) == 0 else None)
+    return P(*fitted)
+
+
+def maybe_shard(x, spec: P):
+    """``with_sharding_constraint`` against the active mesh; identity when no
+    multi-device mesh is installed or the spec doesn't fit ``x``."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return x
+    fitted = _fit_spec(x.shape, spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))
+
+
+def shard_batch_dim(x, axis: int = 0):
+    """Pin ``x``'s batch dim to the data axes (other dims replicated)."""
+    dp = current_dp_axes()
+    if dp is None:
+        return x
+    entries = [None] * x.ndim
+    entries[axis] = dp
+    return maybe_shard(x, P(*entries))
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_named_shardings(mesh, pspec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspec_tree,
+                        is_leaf=_is_pspec)
+
+
+def replicate_like(tree):
+    """Rank-matched fully-replicated pspecs for every leaf of ``tree``."""
+    return jax.tree.map(lambda x: P(*([None] * x.ndim)), tree)
+
+
+def cell_shardings(mesh, cell):
+    """(in_shardings, out_shardings) NamedShardings for a launch cell."""
+    ins = tuple(tree_named_shardings(mesh, ps) for ps in cell.in_pspecs)
+    outs = tree_named_shardings(mesh, cell.out_pspecs)
+    return ins, outs
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _fsdp_leaf_spec(leaf) -> P:
+    """FSDP-style storage spec: last dim over "model", second-to-last over
+    "data" — assigned only when the production axis size divides the dim.
+    1-D leaves (norm scales, biases) and scalars stay replicated."""
+    nd = leaf.ndim
+    if nd < 2:
+        return P(*([None] * nd))
+    entries = [None] * nd
+    if leaf.shape[-1] % PROD_AXIS_SIZE["model"] == 0:
+        entries[-1] = "model"
+    if leaf.shape[-2] % PROD_AXIS_SIZE["data"] == 0:
+        entries[-2] = "data"
+    return P(*entries)
+
+
+def lm_param_pspecs(params_sds, cfg=None):
+    """Pspecs matching the LM param tree (stacked-layer leaves included).
+
+    Weights live FSDP-sharded in HBM; ``LM._gather_fsdp_weights`` re-pins
+    them to "model"-only layouts inside the scan body at apply time, so this
+    only fixes the at-rest placement. ``cfg`` is accepted for call-site
+    stability (expert layout already falls out of the generic rule).
+    """
+    del cfg
+    return jax.tree.map(_fsdp_leaf_spec, params_sds)
+
+
+def lm_batch_pspecs(multi_pod: bool = False):
+    """{"tokens", "labels"}: (B, S) int32, batch over the data axes."""
+    dp = dp_axes(multi_pod)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_pspecs(*, long_context: bool = False, multi_pod: bool = False):
+    """Stacked KV caches {"k","v": (L, B, T, n_kv, hd), "len": ()}.
+
+    The cache-length dim T shards over "model" (always mesh-divisible at the
+    assigned shapes; kv-head counts are not). Batch shards over the data axes
+    except in the long-context cell (B=1 — nothing to split)."""
+    batch_ax = None if long_context else dp_axes(multi_pod)
+    kv = P(None, batch_ax, "model", None, None)
+    return {"k": kv, "v": kv, "len": P()}
+
+
+# ---------------------------------------------------------------------------
+# recsys embedding tables (search/train phase)
+# ---------------------------------------------------------------------------
+
+def recsys_table_pspecs(rows_axes, emb_sds=None):
+    """MPE search-phase embedding params: the (n, d) table row-shards over
+    ``rows_axes``; γ is (n/group_size, m) — not generally mesh-divisible and
+    7 floats per group — so it and α/β replicate.
+
+    With ``emb_sds`` (a param dict from any compressor), unknown leaves get
+    rank-matched replicated specs so the tree structures always align."""
+    base = {"emb": P(rows_axes, None), "gamma": P(None, None),
+            "alpha": P(None), "beta": P(None)}
+    if emb_sds is None:
+        return base
+    return {k: base[k] if k in base else P(*([None] * v.ndim))
+            for k, v in emb_sds.items()}
+
+
+# ---------------------------------------------------------------------------
+# MPE packed serving tables
+# ---------------------------------------------------------------------------
+
+def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
+    """Pspecs for a packed inference table (core/inference.py layout).
+
+    Each per-width subtable (rows, words_per_row) row-shards over
+    ``rows_axes``; production-scale subtables pad their rows to multiples of
+    512 (``core.inference._auto_pad_multiple``), which every production axis
+    combination divides, so shard boundaries always land on whole packed
+    rows. Small tables pad to a smaller power of two and simply replicate
+    (``maybe_shard`` drops non-dividing axes). The word dim is never split
+    (a row's codes straddle word boundaries). The id→(bucket, local row)
+    index vectors are gathered by every device and replicate, as do the
+    dequant params α/β."""
+    return {
+        "subtables": {k: P(rows_axes, None) for k in table_sds["subtables"]},
+        "local_idx": P(None),
+        "width_idx": P(None),
+        "alpha": P(None),
+        "beta": P(None),
+    }

@@ -277,10 +277,7 @@ def _mpe_param_specs(n: int, d: int, m: int = 7, group_size: int = 128):
 
 
 def _mpe_emb_pspecs(rows_axes):
-    # gamma has n/group_size rows — not generally divisible by the mesh, and
-    # small (7 floats/group): replicate it. The (n, d) table rows shard.
-    return {"emb": P(rows_axes, None), "gamma": P(None, None),
-            "alpha": P(None), "beta": P(None)}
+    return recsys_table_pspecs(rows_axes)
 
 
 def _packed_param_specs(n, d):

@@ -25,7 +25,8 @@ import jax
 from repro.launch.mesh import make_production_mesh
 from repro.launch.cells import build_cell
 from repro.launch.hlo_analysis import analyze
-from repro.dist.sharding import tree_named_shardings
+from repro.dist.mesh import use_mesh
+from repro.dist.sharding import cell_shardings
 from repro.configs import get_arch, ALL_ARCHS
 
 
@@ -35,11 +36,9 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     cell = build_cell(arch_id, shape, multi_pod, overrides)
-    in_shardings = tuple(tree_named_shardings(mesh, ps)
-                         for ps in cell.in_pspecs)
-    out_shardings = tree_named_shardings(mesh, cell.out_pspecs)
+    in_shardings, out_shardings = cell_shardings(mesh, cell)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(cell.step_fn, in_shardings=in_shardings,
                          out_shardings=out_shardings)
         lowered = jitted.lower(*cell.input_specs)
@@ -47,6 +46,8 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per computation
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     loop_aware = analyze(hlo)  # per-device, while-trip-count weighted
 

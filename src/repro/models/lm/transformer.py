@@ -116,7 +116,9 @@ class LM:
     def _layer_apply(cfg: LMConfig, x, layer_params, *, positions,
                      cache_k=None, cache_v=None, cache_len=None,
                      cache_k_scale=None, cache_v_scale=None):
-        """x: (B,S,d). Returns (x_out, aux_loss, new_cache_k, new_cache_v)."""
+        """x: (B,S,d). Returns (x_out, aux_loss, new_cache_k, new_cache_v,
+        new_k_scale, new_v_scale) — the scales are None unless the caches
+        are int8-quantized."""
         p = layer_params
         if cfg.shard_activations:
             from repro.dist.sharding import shard_batch_dim
@@ -138,25 +140,27 @@ class LM:
             # context parallelism for head counts the mesh can't divide:
             # shard S over "model"; the chunked softmax handles the rest.
             from jax.sharding import PartitionSpec as P
-            from repro.dist.sharding import maybe_shard
-            q = maybe_shard(q, P("data", "model", None, None))
-            k = maybe_shard(k, P("data", "model", None, None))
-            v = maybe_shard(v, P("data", "model", None, None))
+            from repro.dist.sharding import current_dp_axes, maybe_shard
+            dp = current_dp_axes()
+            if dp is not None:
+                q = maybe_shard(q, P(dp, "model", None, None))
+                k = maybe_shard(k, P(dp, "model", None, None))
+                v = maybe_shard(v, P(dp, "model", None, None))
 
-        new_ck = new_cv = None
+        new_ck = new_cv = new_ks = new_vs = None
         if cache_k is not None:
             if cache_k.dtype == jnp.int8:
                 # §Perf, paper-aligned: int8 KV cache (per-(batch,head) scales,
                 # dequant fused into the attention reads) — halves the
-                # decode-dominant KV traffic vs bf16.
-                kq = jnp.clip(jnp.round(k / cache_k_scale), -127, 127)
-                vq = jnp.clip(jnp.round(v / cache_v_scale), -127, 127)
-                new_ck = jax.lax.dynamic_update_slice_in_dim(
-                    cache_k, kq.astype(jnp.int8), cache_len, axis=1)
-                new_cv = jax.lax.dynamic_update_slice_in_dim(
-                    cache_v, vq.astype(jnp.int8), cache_len, axis=1)
-                k_att = new_ck.astype(_dt(cfg)) * cache_k_scale.astype(_dt(cfg))
-                v_att = new_cv.astype(_dt(cfg)) * cache_v_scale.astype(_dt(cfg))
+                # decode-dominant KV traffic vs bf16. Scales are calibrated
+                # from the observed K/V absmax (a static scale saturates any
+                # value beyond 127·scale and flips decode argmaxes).
+                new_ck, new_ks = LM._requant_cache(cache_k, cache_k_scale, k,
+                                                   cache_len)
+                new_cv, new_vs = LM._requant_cache(cache_v, cache_v_scale, v,
+                                                   cache_len)
+                k_att = new_ck.astype(_dt(cfg)) * new_ks.astype(_dt(cfg))
+                v_att = new_cv.astype(_dt(cfg)) * new_vs.astype(_dt(cfg))
             else:
                 new_ck = jax.lax.dynamic_update_slice_in_dim(
                     cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
@@ -186,7 +190,38 @@ class LM:
         else:
             w = p["ffn"]
             ff = (jax.nn.silu(h @ w["w_gate"]) * (h @ w["w_up"])) @ w["w_down"]
-        return x + ff, aux, new_ck, new_cv
+        return x + ff, aux, new_ck, new_cv, new_ks, new_vs
+
+    @staticmethod
+    def _requant_cache(cache, scale, new_vals, cache_len):
+        """Write ``new_vals`` into an int8 cache with running-absmax scales.
+
+        The per-(batch, head) scale is calibrated so the observed absmax maps
+        to code 127: on the first write (empty cache) it is set outright; on
+        later writes it only grows (monotone max), and the already-stored
+        codes are re-quantized onto the coarser grid so one scale stays valid
+        for the whole cache. cache: (B, T, H, hd) int8; scale: (B, 1, H, 1).
+        """
+        vals32 = new_vals.astype(jnp.float32)
+        obs = jnp.maximum(
+            jnp.max(jnp.abs(vals32), axis=(1, 3), keepdims=True) / 127.0, 1e-8)
+        new_scale = jnp.where(cache_len == 0, obs, jnp.maximum(scale, obs))
+
+        def _rewrite(c):  # scale grew: shrink stored codes onto the new grid
+            return jnp.clip(jnp.round(c.astype(jnp.float32)
+                                      * (scale / new_scale)),
+                            -127, 127).astype(jnp.int8)
+
+        # The full-cache rewrite is the rare path — scales only grow, mostly
+        # during the first writes. The common decode step must stay
+        # read-cache + write-one-slot, or the rewrite traffic would eat the
+        # bandwidth halving the int8 cache exists for. (A shrink below the
+        # seed scale happens only on an all-zero cache: nothing to rewrite.)
+        cache = jax.lax.cond(jnp.any(new_scale > scale), _rewrite,
+                             lambda c: c, cache)
+        q = jnp.clip(jnp.round(vals32 / new_scale), -127, 127).astype(jnp.int8)
+        return (jax.lax.dynamic_update_slice_in_dim(cache, q, cache_len,
+                                                    axis=1), new_scale)
 
     @staticmethod
     def _gather_fsdp_weights(p, cfg: LMConfig):
@@ -267,14 +302,14 @@ class LM:
                 else:
                     lp, ck, cv = xs
                     ks = vs = None
-                h, a, nck, ncv = LM._layer_apply(cfg, h, lp, positions=positions,
-                                                 cache_k=ck, cache_v=cv,
-                                                 cache_len=cache_len,
-                                                 cache_k_scale=ks,
-                                                 cache_v_scale=vs)
+                h, a, nck, ncv, nks, nvs = LM._layer_apply(
+                    cfg, h, lp, positions=positions, cache_k=ck, cache_v=cv,
+                    cache_len=cache_len, cache_k_scale=ks, cache_v_scale=vs)
+                if quant_kv:
+                    return (h, aux + a), (nck, ncv, nks, nvs)
                 return (h, aux + a), (nck, ncv)
             lp = xs
-            h, a, _, _ = LM._layer_apply(cfg, h, lp, positions=positions)
+            h, a, *_ = LM._layer_apply(cfg, h, lp, positions=positions)
             return (h, aux + a), None
 
         body_fn = jax.checkpoint(body) if (cfg.remat and kv_caches is None) else body
@@ -294,8 +329,8 @@ class LM:
             new_caches = {"k": caches_out[0], "v": caches_out[1],
                           "len": kv_caches["len"] + tokens.shape[1]}
             if quant_kv:
-                new_caches["k_scale"] = kv_caches["k_scale"]
-                new_caches["v_scale"] = kv_caches["v_scale"]
+                new_caches["k_scale"] = caches_out[2]
+                new_caches["v_scale"] = caches_out[3]
         return logits, aux, new_caches
 
     @staticmethod
@@ -311,7 +346,7 @@ class LM:
 
         def body(carry, lp):
             h, aux = carry
-            h, a, _, _ = LM._layer_apply(cfg, h, lp, positions=positions)
+            h, a, *_ = LM._layer_apply(cfg, h, lp, positions=positions)
             return (h, aux + a), None
 
         body_fn = jax.checkpoint(body) if cfg.remat else body
@@ -344,7 +379,10 @@ class LM:
         caches = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
                   "len": jnp.asarray(prefill_len, jnp.int32)}
         if dtype == jnp.int8:
-            # §Perf, paper-aligned: int8 KV with per-(layer,batch,head) scales
+            # §Perf, paper-aligned: int8 KV with per-(layer,batch,head) scales.
+            # kv_scale_init only seeds caches created with prefill_len > 0;
+            # the first write into an empty cache calibrates the scale from
+            # the observed K/V absmax (see LM._requant_cache).
             sshape = (cfg.n_layers, batch, 1, cfg.n_kv_heads, 1)
             caches["k_scale"] = jnp.full(sshape, kv_scale_init, jnp.float32)
             caches["v_scale"] = jnp.full(sshape, kv_scale_init, jnp.float32)

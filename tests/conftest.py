@@ -1,3 +1,11 @@
+"""Shared fixtures.
+
+Collection must never hard-fail on missing dev-only deps: modules using
+hypothesis (see requirements-dev.txt) begin with
+``pytest.importorskip("hypothesis")`` so they collect as skipped when the
+dep is absent. ``scripts/verify.sh`` runs a collect-only smoke to enforce a
+clean import graph.
+"""
 import numpy as np
 import pytest
 
