@@ -7,12 +7,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import (LAM, SEED, STEPS, builder, dataset, print_csv,
                                run_mpe)
 from repro.core.mpe import MPEConfig
-from repro.core.sampling import MPERetrainEmbedding
 from repro.train.loop import Trainer
 from repro.train.optimizer import adam
 

@@ -11,12 +11,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import (LAM, SEED, builder, dataset, fields, print_csv,
-                               run_mpe)
+from benchmarks.common import SEED, builder, dataset, print_csv, run_mpe
 from repro.core.inference import packed_lookup
-from repro.models.dlrm import DLRM, DLRMConfig
+from repro.models.dlrm import DLRM
 
 BATCH = 10_000  # paper §5.5
 
@@ -36,7 +34,6 @@ def main():
     ids = jnp.asarray(ds.batch(99)["ids"])
 
     base_cfg = builder("dnn")(jax.random.PRNGKey(SEED), "plain", {})["cfg"]
-    n = res["packed_meta"]["n"]
 
     # --- fp32 backbone
     bundle = builder("dnn")(jax.random.PRNGKey(SEED), "plain", {})

@@ -1,0 +1,91 @@
+"""Serving-latency benchmark → BENCH_serve.json (the perf-trajectory point).
+
+Runs the full packed-table serving path — MPE pipeline, engine registration,
+a p99 traffic stream plus one bulk job — and emits a machine-readable record:
+per-cell p50/p99 with the Figure-5 lookup-vs-compute split, cell-cache
+counters, compile seconds, and the table's compression stats. CI runs the
+``--smoke`` variant on CPU every PR and uploads the artifact, so the serve
+latency trajectory accumulates one data point per change.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+    PYTHONPATH=src python benchmarks/serve_bench.py --out benchmarks/artifacts/BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.serve import build_engine, train_packed_dlrm
+
+FULL = dict(field_vocabs=(3000, 2000, 1500, 1000, 800, 700), train_steps=150,
+            steps=50, batch=300, bulk=20_000, p99_rows=512, bulk_rows=4096)
+SMOKE = dict(field_vocabs=(600, 400, 500, 300), train_steps=30,
+             steps=10, batch=100, bulk=1500, p99_rows=128, bulk_rows=1024)
+
+
+def run(cfg: dict) -> dict:
+    t0 = time.time()
+    serve_cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=cfg["field_vocabs"], train_steps=cfg["train_steps"])
+    train_s = time.time() - t0
+
+    t0 = time.time()
+    engine = build_engine(serve_cfg, params, state, buffers,
+                          p99_rows=cfg["p99_rows"], bulk_rows=cfg["bulk_rows"])
+    register_s = time.time() - t0
+
+    req_ds = SyntheticCTR(spec._replace(batch_size=cfg["batch"]))
+    for step in range(cfg["steps"]):
+        engine.score(req_ds.batch(10_000 + step)["ids"])
+    bulk_ds = SyntheticCTR(spec._replace(batch_size=cfg["bulk"]))
+    engine.score(bulk_ds.batch(99_999)["ids"])
+
+    skip = min(3, cfg["steps"] - 1)
+    print(engine.stats.format_table(skip_warmup=skip))
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items()},
+        "env": {"jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "platform": platform.platform()},
+        "train_s": round(train_s, 2),
+        "register_s": round(register_s, 2),
+        "cells": engine.summary(skip_warmup=skip),
+        "cache": engine.counters(),
+        "storage_ratio": res["storage_ratio"],
+        "avg_bits": res["avg_bits"],
+        "packed_bytes": res["packed_bytes"],
+        "unix_time": int(time.time()),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny table + short stream (the CI data point)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default benchmarks/artifacts/BENCH_serve.json)")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or os.path.join("benchmarks", "artifacts",
+                                        "BENCH_serve.json")
+    result = run(dict(SMOKE if args.smoke else FULL,
+                      mode="smoke" if args.smoke else "full"))
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"[serve_bench] cache={result['cache']} "
+          f"ratio={result['storage_ratio']:.4f}")
+    print(f"[serve_bench] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,7 @@ Validated claims: (i) MPE reaches the lowest ratio at ≈backbone accuracy,
 """
 from __future__ import annotations
 
-from benchmarks.common import METHOD_CFGS, print_csv, run_baseline, run_mpe
+from benchmarks.common import print_csv, run_baseline, run_mpe
 
 
 def main(backbones=("dnn", "dcn"), full: bool = False):

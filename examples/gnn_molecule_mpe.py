@@ -5,7 +5,6 @@
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mpe import MPEConfig

@@ -1,11 +1,17 @@
 """Serving scenario: batched request scoring from a bit-packed table.
 
-Thin wrapper over repro.launch.serve (trains a quick pipeline, then measures
-p50/p99 batch-scoring latency split like paper Figure 5).
+Drives the persistent serving engine (``repro.serve.Engine``) through the
+``repro.launch.serve`` CLI: trains a quick MPE pipeline, registers the
+serve_p99/serve_bulk cell shapes, then streams off-shape request batches
+through the batcher and reports per-cell p50/p99 latency in the Figure-5
+lookup-vs-compute split.
 
     PYTHONPATH=src python examples/serve_packed.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main()
+    # 300-row requests deliberately ride the 512-row serve_p99 cell (pad-to-
+    # shape), and the bulk job chunks onto serve_bulk — the full engine path.
+    main(["--steps", "20", "--batch", "300", "--bulk", "10000",
+          "--train-steps", "80"])

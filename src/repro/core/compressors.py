@@ -1,7 +1,6 @@
 """Registry adapters exposing MPE phases through the common compressor API."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import BaseCompressor, register

@@ -103,6 +103,14 @@ def packed_lookup(table, meta, ids: jnp.ndarray) -> jnp.ndarray:
     return out.reshape(*ids.shape, d)
 
 
+def packed_lookup_fn(meta):
+    """``packed_lookup`` with the static metadata bound: ``(table, ids) ->
+    embeddings``. The closure is jit-stable (meta never appears as a traced
+    argument), so the serving engine can compile one lookup-only executable
+    per cell shape for the Figure-5 lookup-vs-compute latency split."""
+    return lambda table, ids: packed_lookup(table, meta, ids)
+
+
 def packed_storage_bytes(table) -> int:
     """Bytes of the packed subtables (index vectors reported separately)."""
     return sum(int(v.size) * 4 for v in jax.tree.leaves(table["subtables"]))

@@ -17,7 +17,6 @@ Trainer signature.
 """
 from __future__ import annotations
 
-import copy
 from typing import Callable
 
 import jax

@@ -170,6 +170,20 @@ def lm_cache_pspecs(*, long_context: bool = False, multi_pod: bool = False):
     return {"k": kv, "v": kv, "len": P()}
 
 
+def lm_kv_cache_pspecs(*, quantized: bool = False, long_context: bool = False,
+                       multi_pod: bool = False):
+    """``lm_cache_pspecs`` plus the int8 per-(layer, batch, head) scale
+    entries {"k_scale","v_scale": (L, B, 1, n_kv, 1)} when ``quantized``.
+
+    Scales shard with the cache batch axis only — the T and head dims are
+    size-1/ungathered, so everything else replicates."""
+    ps = lm_cache_pspecs(long_context=long_context, multi_pod=multi_pod)
+    if quantized:
+        scale_ps = P(None, ps["k"][1], None, None, None)
+        ps = dict(ps, k_scale=scale_ps, v_scale=scale_ps)
+    return ps
+
+
 # ---------------------------------------------------------------------------
 # recsys embedding tables (search/train phase)
 # ---------------------------------------------------------------------------
@@ -212,3 +226,22 @@ def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
         "alpha": P(None),
         "beta": P(None),
     }
+
+
+def packed_serve_pspecs(params, *, rows_axes=("model",),
+                        row_keys=("wide", "fm_linear")):
+    """Full param-tree pspecs for a model serving from a packed table.
+
+    ``params["embedding"]`` gets the packed-table layout above; per-feature
+    1-D vectors named in ``row_keys`` (wide & deep's linear term, DeepFM's
+    first-order weights) row-shard with the vocab; everything else — MLP,
+    cross layers, towers — replicates. Used by both the dry-run serve cells
+    (``launch/cells.py``) and the live engine (``repro.serve``)."""
+    pspecs = {k: replicate_like(v) for k, v in params.items()
+              if k != "embedding"}
+    pspecs["embedding"] = packed_table_pspecs(params["embedding"],
+                                              rows_axes=rows_axes)
+    for k in row_keys:
+        if k in params:
+            pspecs[k] = P(rows_axes)
+    return pspecs

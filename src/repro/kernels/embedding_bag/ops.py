@@ -6,7 +6,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 

@@ -16,30 +16,28 @@ Shape cells follow the assignment exactly:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.configs.gin_tu import GRAPH_CELLS
 from repro.core.inference import packed_specs
 from repro.core.mpe import MPEConfig
 from repro.data.graphs import NeighborSampler
-from repro.dist.sharding import (dp_axes, lm_batch_pspecs, lm_cache_pspecs,
-                                 lm_param_pspecs, recsys_table_pspecs,
-                                 packed_table_pspecs, replicate_like,
-                                 tree_named_shardings)
-from repro.models.bst import BST, BSTConfig
+from repro.dist.sharding import (dp_axes, lm_batch_pspecs, lm_kv_cache_pspecs,
+                                 lm_param_pspecs, packed_serve_pspecs,
+                                 recsys_table_pspecs, replicate_like)
+from repro.models.bst import BST
 from repro.models.dlrm import DLRM
 from repro.models.gnn import GIN
 from repro.models.lm import LM
 from repro.models.sasrec import SASRec
 from repro.models.two_tower import TwoTower
 from repro.models.wide_deep import WideDeep
+from repro.serve.cells import packed_score_step
 from repro.train.optimizer import adam, apply_updates
 
 PACKED_HIST = (0.0, 0.30, 0.20, 0.20, 0.10, 0.10, 0.10)  # widths 0..6 (b>0 rows)
@@ -57,10 +55,6 @@ class Cell(NamedTuple):
 
 def sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
-
-
-def _shardings(mesh, pspec_tree):
-    return tree_named_shardings(mesh, pspec_tree)
 
 
 # ---------------------------------------------------------------------------
@@ -125,11 +119,12 @@ def build_lm_cell(arch_id: str, shape: str, multi_pod: bool,
                   "family": "lm"},
         )
 
-    cache_ps = lm_cache_pspecs(long_context=sd.get("long", False),
-                               multi_pod=multi_pod)
     cache_shape = (cfg.n_layers, sd["batch"], sd["seq"], cfg.n_kv_heads,
                    cfg.head_dim)
     kv_dtype = jnp.int8 if (overrides or {}).get("kv_int8") else jnp.bfloat16
+    cache_ps = lm_kv_cache_pspecs(quantized=kv_dtype == jnp.int8,
+                                  long_context=sd.get("long", False),
+                                  multi_pod=multi_pod)
     caches_sds = {"k": sds(cache_shape, kv_dtype),
                   "v": sds(cache_shape, kv_dtype),
                   "len": sds((), jnp.int32)}
@@ -137,8 +132,6 @@ def build_lm_cell(arch_id: str, shape: str, multi_pod: bool,
         sshape = (cfg.n_layers, sd["batch"], 1, cfg.n_kv_heads, 1)
         caches_sds["k_scale"] = sds(sshape, jnp.float32)
         caches_sds["v_scale"] = sds(sshape, jnp.float32)
-        scale_ps = P(None, cache_ps["k"][1], None, None, None)
-        cache_ps = dict(cache_ps, k_scale=scale_ps, v_scale=scale_ps)
 
     if sd["kind"] == "prefill":
         tokens_sds = sds((sd["batch"], sd["seq"]), jnp.int32)
@@ -385,34 +378,21 @@ def _flat_ctr_cell(spec, shape, batch, train, dp, rows_axes, multi_pod, *,
         sds((2,), jnp.uint32))
     params_sds = dict(params_sds)
     params_sds["embedding"] = _packed_param_specs(n, d)
-    p_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)),
-                            {k: v for k, v in params_sds.items()
-                             if k != "embedding"})
-    p_pspecs["embedding"] = packed_table_pspecs(params_sds["embedding"],
-                                                rows_axes=rows_axes)
-    if "wide" in params_sds:
-        p_pspecs["wide"] = P(rows_axes)
-    if "fm_linear" in params_sds:
-        p_pspecs["fm_linear"] = P(rows_axes)
+    p_pspecs = packed_serve_pspecs(params_sds, rows_axes=rows_axes)
     buffers_sds = dict(buffers_sds, embedding={})
     bufs_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)), buffers_sds)
     st_pspecs = replicate_like(state_sds)
     ids_sds = sds((n_eff, len(fields)), jnp.int32)
     ids_ps = P(rows_axes if shape == "retrieval_cand" else dp, None)
 
-    def serve_step(params, state, buffers, ids):
-        logits, _, _ = model.apply(params, buffers, state, {"ids": ids}, cfg,
-                                   train=False)
-        if shape == "retrieval_cand":
-            return tuple(jax.lax.top_k(logits, 100))
-        return logits
+    serve_step = packed_score_step(
+        model, cfg, top_k=100 if shape == "retrieval_cand" else None)
 
     return _serve_cell(
         f"{spec.arch_id}/{shape}", serve_step,
         (params_sds, state_sds, buffers_sds, ids_sds),
         (p_pspecs, st_pspecs, bufs_pspecs, ids_ps),
-        (P(None), P(None)) if shape == "retrieval_cand"
-        else (ids_ps[0] if False else P(dp)),
+        (P(None), P(None)) if shape == "retrieval_cand" else P(dp),
         {"kind": "serve", "family": "recsys", "rows": n, "batch": n_eff},
     )
 
@@ -464,11 +444,7 @@ def _two_tower_cell(spec, shape, batch, train, dp, rows_axes, multi_pod):
     params_sds, buffers_sds, state_sds = jax.eval_shape(
         lambda k: TwoTower.init(k, cfg), sds((2,), jnp.uint32))
     params_sds = dict(params_sds, embedding=_packed_param_specs(n, d))
-    p_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)),
-                            {k: v for k, v in params_sds.items()
-                             if k != "embedding"})
-    p_pspecs["embedding"] = packed_table_pspecs(params_sds["embedding"],
-                                                rows_axes=rows_axes)
+    p_pspecs = packed_serve_pspecs(params_sds, rows_axes=rows_axes)
     buffers_sds = dict(buffers_sds, embedding={})
     bufs_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)), buffers_sds)
     st_pspecs = replicate_like(state_sds)
@@ -544,11 +520,7 @@ def _bst_cell(spec, shape, batch, train, dp, rows_axes, multi_pod):
     params_sds, buffers_sds, state_sds = jax.eval_shape(
         lambda k: BST.init(k, cfg), sds((2,), jnp.uint32))
     params_sds = dict(params_sds, embedding=_packed_param_specs(n, d))
-    p_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)),
-                            {k: v for k, v in params_sds.items()
-                             if k != "embedding"})
-    p_pspecs["embedding"] = packed_table_pspecs(params_sds["embedding"],
-                                                rows_axes=rows_axes)
+    p_pspecs = packed_serve_pspecs(params_sds, rows_axes=rows_axes)
     buffers_sds = dict(buffers_sds, embedding={})
     bufs_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)), buffers_sds)
     st_pspecs = replicate_like(state_sds)
@@ -609,11 +581,7 @@ def _sasrec_cell(spec, shape, batch, train, dp, rows_axes, multi_pod):
     params_sds, _, _ = jax.eval_shape(lambda k: SASRec.init(k, cfg),
                                       sds((2,), jnp.uint32))
     params_sds = dict(params_sds, embedding=_packed_param_specs(n, d))
-    p_pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)),
-                            {k: v for k, v in params_sds.items()
-                             if k != "embedding"})
-    p_pspecs["embedding"] = packed_table_pspecs(params_sds["embedding"],
-                                                rows_axes=rows_axes)
+    p_pspecs = packed_serve_pspecs(params_sds, rows_axes=rows_axes)
     buffers_sds = {"embedding": {}}
     bufs_pspecs = {"embedding": {}}
 

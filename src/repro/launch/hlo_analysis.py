@@ -243,7 +243,6 @@ def analyze(hlo: str) -> dict:
 def breakdown(hlo: str, top: int = 12) -> list:
     """Top computations by weighted bytes/flops — the §Perf profiling view."""
     entry, comps = split_computations(hlo)
-    result = analyze(hlo)  # re-walk to populate weights identically
     # recompute weights (analyze doesn't return them)
     from collections import defaultdict
     facts = {}

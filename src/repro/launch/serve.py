@@ -1,49 +1,55 @@
-"""Serving launcher: load a packed mixed-precision table and score requests.
+"""Serving launcher: drive the packed-table engine with a live traffic mix.
 
-Demonstrates the paper's §4 deployment: embeddings live bit-packed in memory;
-lookups dequantize on the fly. Batched scoring loop with latency stats
-(mirrors the paper's Figure-5 protocol: lookup vs compute split).
+Thin CLI over ``repro.serve.Engine`` (the paper's §4 deployment path):
+train-or-load a packed mixed-precision table, register the serve cell shapes
+(``serve_p99`` for latency traffic, ``serve_bulk`` for offline jobs), then
+stream request batches through ``engine.score``. Requests of any size ride
+the registered shapes via pad-to-shape batching — ``--batch 300`` really
+issues 300-row requests (padded onto the 512-row p99 cell), it no longer
+silently falls back to the training batch size.
 
-    python -m repro.launch.serve --steps 50 --batch 512
+Per-cell p50/p99 latency is reported in the Figure-5 lookup-vs-compute split,
+plus the cell-cache counters (a warm process performs zero recompiles).
+
+    python -m repro.launch.serve --steps 20 --batch 300
+    python -m repro.launch.serve --steps 50 --batch 300 --bulk 20000 --json out.json
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
 from repro.data.synthetic import CTRSpec, SyntheticCTR
 from repro.embeddings.table import FieldSpec
-from repro.models.dlrm import DLRM, DLRMConfig
+from repro.models.dlrm import DLRMConfig
+from repro.serve import Engine
 from repro.train.optimizer import adam
 from repro.zoo import dlrm_builder
 
+DEFAULT_VOCABS = (2000, 1000, 1500, 800)
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=512)
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--train-steps", type=int, default=120)
-    args = ap.parse_args()
 
-    # quick pipeline to obtain a packed table + trained interaction net
-    spec = CTRSpec(field_vocabs=(2000, 1000, 1500, 800), batch_size=1024)
+def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
+                      train_batch: int = 1024, d_embed: int = 16,
+                      mlp_hidden=(64, 32), lam: float = 3e-5, seed: int = 0):
+    """Quick MPE pipeline → (serve cfg, params, state, buffers, dataset
+    spec, pipeline result). The packed table + retrained interaction net are
+    exactly what the engine binds at cell registration."""
+    spec = CTRSpec(field_vocabs=tuple(field_vocabs), batch_size=train_batch,
+                   seed=seed)
     ds = SyntheticCTR(spec)
     fields = tuple(FieldSpec(f"f{i}", v) for i, v in enumerate(spec.field_vocabs))
-    base = DLRMConfig(fields=fields, d_embed=16, mlp_hidden=(64, 32),
+    base = DLRMConfig(fields=fields, d_embed=d_embed, mlp_hidden=tuple(mlp_hidden),
                       backbone="dnn")
-    build = dlrm_builder(base, ds.expected_frequencies(), lam=3e-5)
+    build = dlrm_builder(base, ds.expected_frequencies(), lam=lam)
     res = run_mpe_pipeline(build, lambda s: ds.batch(s),
-                           key=jax.random.PRNGKey(0), mpe_cfg=MPEConfig(lam=3e-5),
-                           optimizer=adam(1e-3), search_steps=args.train_steps,
-                           retrain_steps=args.train_steps)
-    print(f"[serve] packed table: ratio={res['storage_ratio']:.4f} "
-          f"bytes={res['packed_bytes']}")
+                           key=jax.random.PRNGKey(seed), mpe_cfg=MPEConfig(lam=lam),
+                           optimizer=adam(1e-3), search_steps=train_steps,
+                           retrain_steps=train_steps, log_fn=lambda *a: None)
 
     cfg = base._replace(compressor="packed",
                         comp_cfg={"bits": res["packed_meta"]["bits"],
@@ -52,24 +58,75 @@ def main():
     params = {k: v for k, v in res["final_params"].items() if k != "embedding"}
     params["embedding"] = res["packed_table"]
     buffers = dict(res["buffers"], embedding={})
-    state = res["state"]
+    return cfg, params, res["state"], buffers, spec, res
 
-    @jax.jit
-    def serve_step(p, batch_ids):
-        logits, _, _ = DLRM.apply(p, buffers, state, {"ids": batch_ids}, cfg,
-                                  train=False)
-        return jax.nn.sigmoid(logits)
 
-    lat = []
+def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
+                 bulk_rows: int = 4096, lookup_split: bool = True) -> Engine:
+    """An engine with the standard cell-shape registry for one DLRM table."""
+    from repro.models.dlrm import DLRM
+    engine = Engine()
+    engine.register_packed_model(
+        "dlrm", DLRM, cfg, params, state, buffers,
+        shapes={"serve_p99": p99_rows, "serve_bulk": bulk_rows},
+        lookup_split=lookup_split)
+    return engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--batch", type=int, default=512,
+                    help="rows per scoring request (any size; the batcher "
+                         "pads/chunks onto the registered cell shapes)")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="number of scoring requests to issue")
+    ap.add_argument("--train-steps", type=int, default=120)
+    ap.add_argument("--p99-rows", type=int, default=512,
+                    help="serve_p99 cell capacity")
+    ap.add_argument("--bulk-rows", type=int, default=4096,
+                    help="serve_bulk cell capacity")
+    ap.add_argument("--bulk", type=int, default=0,
+                    help="also issue one bulk job of this many rows")
+    ap.add_argument("--json", default=None,
+                    help="write the latency/compile summary to this path")
+    args = ap.parse_args(argv)
+
+    cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        train_steps=args.train_steps)
+    print(f"[serve] packed table: ratio={res['storage_ratio']:.4f} "
+          f"bytes={res['packed_bytes']}")
+
+    engine = build_engine(cfg, params, state, buffers,
+                          p99_rows=args.p99_rows, bulk_rows=args.bulk_rows)
+    print(f"[serve] registered cells: "
+          f"{dict(sorted(engine.registered_shapes.items()))} "
+          f"(compiles={engine.compile_count})")
+
+    # request stream at the *requested* batch size — decoupled from training
+    req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
     for step in range(args.steps):
-        ids = jnp.asarray(ds.batch(10_000 + step)["ids"])
-        t0 = time.perf_counter()
-        probs = serve_step(params, ids)
-        probs.block_until_ready()
-        lat.append(time.perf_counter() - t0)
-    lat_ms = np.asarray(lat[3:]) * 1e3  # skip warmup
-    print(f"[serve] batch={args.batch} p50={np.percentile(lat_ms, 50):.2f}ms "
-          f"p99={np.percentile(lat_ms, 99):.2f}ms")
+        engine.score(req_ds.batch(10_000 + step)["ids"])
+    if args.bulk:
+        bulk_ds = SyntheticCTR(spec._replace(batch_size=args.bulk))
+        engine.score(bulk_ds.batch(99_999)["ids"])
+
+    skip = min(3, max(args.steps - 1, 0))  # drop compile-adjacent warmup
+    print(f"[serve] batch={args.batch} steps={args.steps}"
+          + (f" bulk={args.bulk}" if args.bulk else ""))
+    print(engine.stats.format_table(skip_warmup=skip))
+    counters = engine.counters()
+    print(f"[serve] cell cache: compiles={counters['compiles']} "
+          f"hits={counters['hits']} (warm process ⇒ zero recompiles)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"batch": args.batch, "steps": args.steps,
+                       "cells": engine.summary(skip_warmup=skip),
+                       "cache": counters,
+                       "storage_ratio": res["storage_ratio"],
+                       "packed_bytes": res["packed_bytes"]}, f, indent=2)
+        print(f"[serve] wrote {args.json}")
+    return engine
 
 
 if __name__ == "__main__":

@@ -9,14 +9,14 @@ batch = {"ids": (B, F) int32 per-field local ids, "label": (B,)}.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import get_compressor
-from repro.embeddings.table import FieldSpec, field_offsets, total_vocab
+from repro.embeddings.table import field_offsets, total_vocab
 from repro.models.interactions import CrossNetwork, fm_second_order, inner_products
 from repro.nn import init as initializers
 from repro.nn.mlp import MLP

@@ -13,7 +13,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.nn import init as initializers
 from repro.nn.linear import Dense
 from repro.nn.norms import RMSNorm
 from repro.nn.rope import apply_rope

@@ -14,8 +14,6 @@ full; jax.checkpoint on the chunk body keeps the backward at one chunk too.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,32 @@
+"""Packed-table serving subsystem (paper §4 deployment path).
+
+Three layers, composable bottom-up:
+
+  ``cache``    — CellCache: compile-once memoization of serving executables
+                 keyed by (arch, shape, mesh signature), with explicit in/out
+                 shardings from ``repro.dist``.
+  ``batcher``  — RequestBatcher: buckets arbitrary request sizes onto the
+                 registered cell shapes (pad-to-shape + validity mask) and
+                 unpads results.
+  ``engine``   — Engine: ``score`` / ``retrieve`` / ``decode`` front-end with
+                 per-cell latency percentiles in the Figure-5
+                 lookup-vs-compute split.
+
+``repro.serve.cells`` holds the serve-cell builders, shared with the dry-run
+harness in ``repro.launch.cells``.
+"""
+from repro.serve.batcher import Chunk, RequestBatcher
+from repro.serve.cache import CellCache, CellKey, CompiledCell, mesh_signature
+from repro.serve.cells import (ServeCellDef, lm_decode_cell, packed_lookup_cell,
+                               packed_score_cell, packed_score_step,
+                               two_tower_retrieval_cell)
+from repro.serve.engine import Engine
+from repro.serve.stats import LatencyStats
+
+__all__ = [
+    "CellCache", "CellKey", "CompiledCell", "mesh_signature",
+    "Chunk", "RequestBatcher", "LatencyStats",
+    "ServeCellDef", "packed_score_cell", "packed_score_step",
+    "packed_lookup_cell", "two_tower_retrieval_cell", "lm_decode_cell",
+    "Engine",
+]

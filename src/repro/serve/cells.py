@@ -1,0 +1,192 @@
+"""Serve-cell builders: (model, config, bound state) → compilable cell defs.
+
+These are the serving counterparts of ``repro.launch.cells`` — but where the
+dry-run builds production-scale ShapeDtypeStruct stand-ins, these bind *real*
+trained arrays (a packed table, tower MLPs, KV caches) and parameterize the
+batch shape, so the same builder serves a 4-field test table on one CPU
+device and the Criteo-scale table on the production mesh. The dry-run serve
+cells reuse ``packed_score_step`` so the lowered computation is identical in
+both harnesses.
+
+A ``ServeCellDef`` separates *bound* inputs (params/state/buffers — device_put
+once at registration) from *request* inputs (ids/tokens/caches — fresh every
+call); ``repro.serve.cache.CellCache`` compiles the pair into one executable
+with explicit shardings.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.inference import packed_lookup_fn
+from repro.dist.sharding import (lm_kv_cache_pspecs, lm_param_pspecs,
+                                 packed_serve_pspecs, replicate_like)
+
+
+class ServeCellDef(NamedTuple):
+    arch: str              # architecture identity (cache-key component)
+    shape: str             # shape name, e.g. "serve_p99"
+    kind: str              # score | lookup | retrieve | decode
+    batch: int             # leading-dim capacity of the compiled executable
+    step_fn: Callable      # step_fn(*bound, *request) -> outputs
+    bound: tuple           # pytrees fixed at registration (params, state, ...)
+    bound_pspecs: tuple
+    request_specs: tuple   # ShapeDtypeStructs for the per-request inputs
+    request_pspecs: tuple
+    out_pspecs: Any
+    meta: dict
+    static: Any = None     # config baked into step_fn closures (cfg, top_k…)
+    make_request_state: Callable | None = None  # e.g. fresh KV caches
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+    @property
+    def fingerprint(self) -> str:
+        """Digest of everything baked into the compiled executable beyond the
+        input avals — the step closure's static config (``static``), kind and
+        meta. Part of the cache key: two same-named registrations with
+        different baked-in config must not share an executable."""
+        blob = repr((self.kind, self.batch, sorted(self.meta.items(), key=str),
+                     self.static))
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def packed_score_step(model, cfg, *, top_k: int | None = None):
+    """The packed-table scoring computation shared by the live engine and the
+    dry-run serve cells: eval-mode forward over a packed embedding config,
+    optionally topped with a candidate ``top_k``."""
+    def serve_step(params, state, buffers, ids):
+        logits, _, _ = model.apply(params, buffers, state, {"ids": ids}, cfg,
+                                   train=False)
+        if top_k is not None:
+            return tuple(jax.lax.top_k(logits, top_k))
+        return logits
+    return serve_step
+
+
+def packed_score_cell(model, cfg, params, state, buffers, *, batch: int,
+                      arch: str, shape: str, dp=("data",),
+                      rows_axes=("model",)) -> ServeCellDef:
+    """Batched CTR scoring from a packed table: ``ids (B, F) -> logits (B,)``.
+
+    ``cfg`` must carry ``compressor="packed"`` with the table's comp_cfg;
+    ``params["embedding"]`` is the packed table pytree."""
+    n_fields = len(cfg.fields)
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="score", batch=batch,
+        step_fn=packed_score_step(model, cfg),
+        bound=(params, state, buffers),
+        bound_pspecs=(packed_serve_pspecs(params, rows_axes=rows_axes),
+                      replicate_like(state), replicate_like(buffers)),
+        request_specs=(_sds((batch, n_fields), jnp.int32),),
+        request_pspecs=(P(dp, None),),
+        out_pspecs=P(dp),
+        meta={"kind": "score", "batch": batch, "n_fields": n_fields},
+        static=cfg,
+    )
+
+
+def packed_lookup_cell(table, meta, offsets, *, batch: int, n_fields: int,
+                       arch: str, shape: str, dp=("data",),
+                       rows_axes=("model",)) -> ServeCellDef:
+    """Lookup-only companion cell: the packed gather+unpack+dequant slice of a
+    score cell, compiled at the same padded shape. The engine times it per
+    request to report the Figure-5 lookup-vs-compute split."""
+    from repro.dist.sharding import packed_table_pspecs
+    lookup = packed_lookup_fn(meta)
+
+    def lookup_step(tbl, offs, ids):
+        return lookup(tbl, ids + offs[None, :])
+
+    return ServeCellDef(
+        arch=arch, shape=f"{shape}.lookup", kind="lookup", batch=batch,
+        step_fn=lookup_step,
+        bound=(table, offsets),
+        bound_pspecs=(packed_table_pspecs(table, rows_axes=rows_axes),
+                      P(None)),
+        request_specs=(_sds((batch, n_fields), jnp.int32),),
+        request_pspecs=(P(dp, None),),
+        out_pspecs=P(dp, None, None),
+        meta={"kind": "lookup", "batch": batch, "n_fields": n_fields},
+        static=(meta["bits"], meta["d"], meta["n"]),
+    )
+
+
+def two_tower_retrieval_cell(model, cfg, params, state, buffers, *,
+                             n_cands: int, top_k: int = 100, arch: str,
+                             shape: str = "retrieval_cand",
+                             rows_axes=("model",)) -> ServeCellDef:
+    """One user against a padded candidate corpus → masked top-k.
+
+    Padded candidates score ``-inf`` through the validity mask, so they can
+    never enter the top-k of a real request."""
+    fu, fi = len(cfg.user_fields), len(cfg.item_fields)
+
+    def retrieve_step(p, st, bufs, user_ids, cand_ids, cand_mask):
+        u, _ = model.user_tower(p, bufs, st, user_ids, cfg)
+        v, _ = model.item_tower(p, bufs, st, cand_ids, cfg)
+        scores = (v @ u[0]) / cfg.temperature
+        scores = jnp.where(cand_mask, scores, -jnp.inf)
+        return tuple(jax.lax.top_k(scores, top_k))
+
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="retrieve", batch=n_cands,
+        step_fn=retrieve_step,
+        bound=(params, state, buffers),
+        bound_pspecs=(packed_serve_pspecs(params, rows_axes=rows_axes),
+                      replicate_like(state), replicate_like(buffers)),
+        request_specs=(_sds((1, fu), jnp.int32), _sds((n_cands, fi), jnp.int32),
+                       _sds((n_cands,), jnp.bool_)),
+        request_pspecs=(P(None, None), P(rows_axes, None), P(rows_axes)),
+        out_pspecs=(P(None), P(None)),
+        meta={"kind": "retrieve", "n_cands": n_cands, "top_k": top_k},
+        static=cfg,
+    )
+
+
+def lm_decode_cell(cfg, params, buffers, *, batch: int, max_len: int,
+                   kv_int8: bool = True, arch: str, shape: str = "decode",
+                   dp=("data",)) -> ServeCellDef:
+    """One-token decode against a persistent KV cache.
+
+    The int8 cache with running-absmax scale calibration (``LM._requant_cache``)
+    is the default — the paper-aligned halving of the decode-dominant KV
+    traffic; pass ``kv_int8=False`` for the bf16 reference cache."""
+    from repro.models.lm import LM
+
+    def decode_step(p, tokens, caches):
+        return LM.decode_step(p, buffers, tokens, caches, cfg)
+
+    kv_dtype = jnp.int8 if kv_int8 else jnp.bfloat16
+    # the model owns cache layout + scale seeding; the SDS template and the
+    # engine's fresh caches both derive from make_kv_caches
+    caches_sds = jax.eval_shape(
+        lambda: LM.make_kv_caches(cfg, batch, max_len, kv_dtype))
+    cache_ps = lm_kv_cache_pspecs(quantized=kv_int8)
+    tok_ps = P(dp, None) if batch > 1 else P(None, None)
+    params_pspecs = lm_param_pspecs(params, cfg)
+
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="decode", batch=batch,
+        step_fn=decode_step,
+        bound=(params,),
+        bound_pspecs=(params_pspecs,),
+        request_specs=(_sds((batch, 1), jnp.int32), caches_sds),
+        request_pspecs=(tok_ps, cache_ps),
+        out_pspecs=(tok_ps if batch > 1 else P(None, "model"), cache_ps),
+        meta={"kind": "decode", "batch": batch, "max_len": max_len,
+              "kv_int8": kv_int8},
+        static=cfg,
+        make_request_state=lambda: LM.make_kv_caches(cfg, batch, max_len,
+                                                     kv_dtype),
+    )

@@ -1,0 +1,233 @@
+"""The serving engine: warm compiled cells behind score/retrieve/decode.
+
+Request flow for ``score``:
+
+  ids (n, F) ──plan──▶ chunks on registered shapes ──pad──▶ compiled cell
+  ──unpad──▶ probs (n,)
+
+Every executable is compiled exactly once per (arch, shape, mesh) by the
+``CellCache``; bound state (packed table, MLPs, towers) is device_put with
+its serving shardings at registration and reused across requests. Per-request
+wall-clock is recorded per cell, with a lookup-only companion executable
+timed alongside to report the paper's Figure-5 lookup-vs-compute latency
+split. Timings cover executable dispatch-to-ready (host→device transfer of
+the request ids is excluded, matching the Figure-5 protocol).
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.mesh import host_mesh
+from repro.serve.batcher import RequestBatcher
+from repro.serve.cache import CellCache, CompiledCell
+from repro.serve.cells import (ServeCellDef, packed_lookup_cell,
+                               packed_score_cell)
+from repro.serve.stats import LatencyStats
+
+
+class RegisteredCell(NamedTuple):
+    celldef: ServeCellDef
+    cell: CompiledCell        # the warm executable
+    bound: tuple              # bound inputs, committed to their shardings
+    lookup: "RegisteredCell | None"   # Figure-5 split companion
+
+
+def _sigmoid(x: np.ndarray) -> np.ndarray:
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+class Engine:
+    """Front-end over the cell cache + request batcher.
+
+    One engine holds one mesh (default: the host mesh — 1×1 on a stock CPU,
+    where every sharding constraint is a no-op) and one ``CellCache``; cells
+    from several models can coexist, keyed by their ``arch`` identity.
+    """
+
+    def __init__(self, mesh=None, cache: CellCache | None = None):
+        self.mesh = mesh if mesh is not None else host_mesh()
+        self.cache = cache if cache is not None else CellCache(self.mesh)
+        self.stats = LatencyStats()
+        self._score: dict[str, RegisteredCell] = {}     # bucket name -> cell
+        self._score_batcher = RequestBatcher()
+        self._retrieve: dict[str, RegisteredCell] = {}  # arch -> cell
+        self._decode: dict[str, RegisteredCell] = {}    # arch -> cell
+
+    # -- registration -------------------------------------------------------
+
+    def _compile(self, celldef: ServeCellDef) -> RegisteredCell:
+        # the fingerprint covers config baked into the step closure (model
+        # cfg, top_k, …): same-named registrations with different static
+        # config must compile their own executable, not warm-hit a wrong one
+        key = self.cache.key(
+            celldef.arch,
+            f"{celldef.shape}@{celldef.batch}#{celldef.fingerprint}")
+
+        def build():
+            input_specs = celldef.bound + celldef.request_specs
+            in_pspecs = celldef.bound_pspecs + celldef.request_pspecs
+            return (celldef.step_fn, input_specs, in_pspecs,
+                    celldef.out_pspecs, celldef.meta)
+
+        cell = self.cache.get_or_compile(key, build)
+        n_bound = len(celldef.bound)
+        bound = tuple(jax.device_put(b, s) for b, s in
+                      zip(celldef.bound, cell.in_shardings[:n_bound]))
+        return RegisteredCell(celldef, cell, bound, None)
+
+    def register(self, celldef: ServeCellDef,
+                 lookup_cell: ServeCellDef | None = None) -> RegisteredCell:
+        """Compile (or warm-hit) a cell and route it by kind. Score cells also
+        register their capacity as a batcher bucket under their shape name."""
+        reg = self._compile(celldef)
+        if lookup_cell is not None:
+            reg = reg._replace(lookup=self._compile(lookup_cell))
+        if celldef.kind == "score":
+            self._score[celldef.shape] = reg
+            self._score_batcher.register(celldef.shape, celldef.batch)
+        elif celldef.kind == "retrieve":
+            self._retrieve[celldef.arch] = reg
+        elif celldef.kind == "decode":
+            self._decode[celldef.arch] = reg
+        else:
+            raise ValueError(f"unroutable cell kind {celldef.kind!r}")
+        return reg
+
+    def register_packed_model(self, arch, model, cfg, params, state, buffers,
+                              *, shapes: dict[str, int],
+                              lookup_split: bool = True, dp=("data",),
+                              rows_axes=("model",)):
+        """Register one score cell per (shape name → row capacity) for a flat
+        CTR model serving from a packed table, each with its lookup-split
+        companion when ``lookup_split``."""
+        meta = {k: cfg.comp_cfg[k] for k in ("bits", "d", "n")}
+        n_fields = len(cfg.fields)
+        for shape, rows in shapes.items():
+            cd = packed_score_cell(model, cfg, params, state, buffers,
+                                   batch=rows, arch=arch, shape=shape,
+                                   dp=dp, rows_axes=rows_axes)
+            lc = None
+            if lookup_split:
+                lc = packed_lookup_cell(params["embedding"], meta,
+                                        buffers["offsets"], batch=rows,
+                                        n_fields=n_fields, arch=arch,
+                                        shape=shape, dp=dp,
+                                        rows_axes=rows_axes)
+            self.register(cd, lookup_cell=lc)
+
+    # -- request paths ------------------------------------------------------
+
+    def _timed_call(self, reg: RegisteredCell, *request):
+        t0 = time.perf_counter()
+        out = reg.cell.compiled(*reg.bound, *request)
+        jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) * 1e3
+
+    def score(self, ids, *, return_logits: bool = False) -> np.ndarray:
+        """Score an (n, F) id batch; any n — the batcher pads/chunks onto the
+        registered cell shapes. Returns probabilities (or raw logits)."""
+        ids = np.asarray(ids, np.int32)
+        out = np.empty((ids.shape[0],), np.float32)
+        for chunk, padded, _mask in self._score_batcher.split(ids):
+            reg = self._score[chunk.bucket]
+            x = jax.device_put(jnp.asarray(padded),
+                               reg.cell.in_shardings[len(reg.bound)])
+            y, total_ms = self._timed_call(reg, x)
+            lookup_ms = None
+            if reg.lookup is not None:
+                _, lookup_ms = self._timed_call(reg.lookup, x)
+            self.stats.record(reg.celldef.name, total_ms, lookup_ms)
+            out[chunk.start:chunk.start + chunk.n_valid] = \
+                np.asarray(y)[:chunk.n_valid]
+        return out if return_logits else _sigmoid(out)
+
+    def retrieve(self, user_ids, cand_ids, *, arch: str | None = None):
+        """Top-k retrieval of one user against an arbitrary-size candidate
+        corpus. Oversized corpora are chunked onto the compiled candidate
+        capacity and the per-chunk top-ks merged; padded candidates are
+        masked to -inf inside the cell. Returns (scores, indices) sorted."""
+        reg = self._pick(self._retrieve, arch, "retrieval")
+        cap = reg.celldef.batch
+        top_k = reg.celldef.meta["top_k"]
+        user = jax.device_put(jnp.asarray(np.asarray(user_ids, np.int32)),
+                              reg.cell.in_shardings[len(reg.bound)])
+        cand_ids = np.asarray(cand_ids, np.int32)
+        all_scores, all_idx = [], []
+        for start in range(0, cand_ids.shape[0], cap):
+            part = cand_ids[start:start + cap]
+            padded, mask = RequestBatcher.pad(part, cap)
+            c = jax.device_put(jnp.asarray(padded),
+                               reg.cell.in_shardings[len(reg.bound) + 1])
+            m = jax.device_put(jnp.asarray(mask),
+                               reg.cell.in_shardings[len(reg.bound) + 2])
+            (scores, idx), total_ms = self._timed_call(reg, user, c, m)
+            self.stats.record(reg.celldef.name, total_ms)
+            keep = min(top_k, part.shape[0])
+            all_scores.append(np.asarray(scores)[:keep])
+            all_idx.append(np.asarray(idx)[:keep] + start)
+        scores = np.concatenate(all_scores)
+        idx = np.concatenate(all_idx)
+        order = np.argsort(-scores)[:top_k]
+        return scores[order], idx[order]
+
+    def decode(self, tokens, caches=None, *, arch: str | None = None):
+        """One decode step for a (b, 1) token batch, b ≤ the cell's capacity.
+        ``caches=None`` starts fresh KV caches (int8 + running-absmax scales
+        when the cell was registered with ``kv_int8``, the default). Returns
+        (logits (b, V), new_caches) — feed ``new_caches`` back in."""
+        reg = self._pick(self._decode, arch, "decode")
+        cap = reg.celldef.batch
+        tokens = np.asarray(tokens, np.int32)
+        b = tokens.shape[0]
+        padded, _ = RequestBatcher.pad(tokens, cap)
+        toks = jax.device_put(jnp.asarray(padded),
+                              reg.cell.in_shardings[len(reg.bound)])
+        if caches is None:
+            caches = self.fresh_caches(arch=reg.celldef.arch)
+        (logits, new_caches), total_ms = self._timed_call(reg, toks, caches)
+        self.stats.record(reg.celldef.name, total_ms)
+        return np.asarray(logits)[:b], new_caches
+
+    def fresh_caches(self, *, arch: str | None = None):
+        """Fresh KV caches for a decode cell — built by the model's own cache
+        constructor (bound at cell build time, so layout and scale seeding
+        stay the model's single source of truth), committed to the compiled
+        cache shardings."""
+        reg = self._pick(self._decode, arch, "decode")
+        caches = reg.celldef.make_request_state()
+        return jax.device_put(caches,
+                              reg.cell.in_shardings[len(reg.bound) + 1])
+
+    @staticmethod
+    def _pick(table: dict, arch: str | None, what: str) -> RegisteredCell:
+        if not table:
+            raise ValueError(f"no {what} cell registered")
+        if arch is not None:
+            return table[arch]
+        if len(table) > 1:
+            raise ValueError(
+                f"multiple {what} cells registered ({sorted(table)}); "
+                f"pass arch=")
+        return next(iter(table.values()))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def compile_count(self) -> int:
+        return self.cache.compiles
+
+    @property
+    def registered_shapes(self) -> dict:
+        """The score-path cell-shape registry: shape name → row capacity."""
+        return self._score_batcher.shapes
+
+    def counters(self) -> dict:
+        return self.cache.counters()
+
+    def summary(self, *, skip_warmup: int = 0) -> dict:
+        return self.stats.summary(skip_warmup=skip_warmup)

@@ -1,0 +1,67 @@
+"""Per-cell serving latency accounting.
+
+Follows the paper's Figure-5 protocol: end-to-end request latency is split
+into *table lookup* (packed gather + unpack + dequant) and *computation*
+(interaction network / towers / decode). The engine measures the lookup slice
+with a dedicated lookup-only executable per cell (same padded shape, same
+table shardings), so the split survives recompiles and shape changes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class LatencyStats:
+    """Append-only per-cell latency records with percentile summaries."""
+
+    def __init__(self):
+        self._total_ms: dict[str, list] = {}
+        self._lookup_ms: dict[str, list] = {}
+
+    def record(self, cell: str, total_ms: float, lookup_ms: float | None = None):
+        self._total_ms.setdefault(cell, []).append(float(total_ms))
+        if lookup_ms is not None:
+            self._lookup_ms.setdefault(cell, []).append(float(lookup_ms))
+
+    def cells(self):
+        return sorted(self._total_ms)
+
+    def percentiles(self, cell: str, *, skip_warmup: int = 0) -> dict:
+        """p50/p99/mean of total latency plus the lookup/compute split.
+
+        ``skip_warmup`` drops the first N records (the compile-adjacent
+        requests) before aggregating; falls back to all records when fewer
+        than N+1 exist."""
+        lat = np.asarray(self._total_ms[cell])
+        if lat.shape[0] > skip_warmup:
+            lat = lat[skip_warmup:]
+        out = {
+            "count": int(len(self._total_ms[cell])),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_ms": float(lat.mean()),
+        }
+        lk = self._lookup_ms.get(cell)
+        if lk:
+            lk = np.asarray(lk)
+            if lk.shape[0] > skip_warmup:
+                lk = lk[skip_warmup:]
+            lookup_p50 = float(np.percentile(lk, 50))
+            out["lookup_p50_ms"] = lookup_p50
+            out["compute_p50_ms"] = max(out["p50_ms"] - lookup_p50, 0.0)
+        return out
+
+    def summary(self, *, skip_warmup: int = 0) -> dict:
+        return {c: self.percentiles(c, skip_warmup=skip_warmup)
+                for c in self.cells()}
+
+    def format_table(self, *, skip_warmup: int = 0) -> str:
+        lines = []
+        for cell, s in self.summary(skip_warmup=skip_warmup).items():
+            line = (f"{cell:<28} n={s['count']:<5} "
+                    f"p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms")
+            if "lookup_p50_ms" in s:
+                line += (f" lookup={s['lookup_p50_ms']:.2f}ms "
+                         f"compute={s['compute_p50_ms']:.2f}ms")
+            lines.append(line)
+        return "\n".join(lines)

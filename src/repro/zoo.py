@@ -7,8 +7,6 @@ the Trainer signature (params, buffers, state, batch, *, step).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,10 +1,6 @@
 """Data generators + metrics."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
-pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
-from hypothesis import given, settings, strategies as st
 
 from repro.data.graphs import NeighborSampler, csr_from_edges, make_sbm_graph
 from repro.data.synthetic import CTRSpec, SyntheticCTR

@@ -12,7 +12,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core.inference import packed_specs

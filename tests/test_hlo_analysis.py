@@ -1,7 +1,6 @@
 """Loop-aware HLO analyzer: trip-count weighting against known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze, split_computations
 

@@ -1,0 +1,295 @@
+"""The packed-table serving subsystem (repro.serve).
+
+Covers the three layers: batcher pad/unpad round-trips at off-shape request
+sizes, cell-cache hit/miss behaviour via compile counts (the zero-recompile
+acceptance criterion), and end-to-end ``score``/``retrieve``/``decode``
+against unbatched references.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inference import build_packed_table
+from repro.core.mpe import MPEConfig
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.serve import build_engine, train_packed_dlrm
+from repro.models.dlrm import DLRM
+from repro.serve import Engine, RequestBatcher
+from repro.serve.cache import CellCache
+from repro.serve.cells import lm_decode_cell, two_tower_retrieval_cell
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+def _registry():
+    return RequestBatcher({"serve_p99": 512, "serve_bulk": 2048})
+
+
+@pytest.mark.parametrize("n", [1, 300, 513, 5000])
+def test_batcher_plan_covers_request(n):
+    chunks = _registry().plan(n)
+    # chunks tile the request exactly, in order, without overlap
+    assert chunks[0].start == 0
+    for prev, cur in zip(chunks, chunks[1:]):
+        assert cur.start == prev.start + prev.n_valid
+    assert sum(c.n_valid for c in chunks) == n
+    for c in chunks:
+        assert 0 < c.n_valid <= c.rows
+
+
+def test_batcher_bucket_selection():
+    b = _registry()
+    assert [c.bucket for c in b.plan(1)] == ["serve_p99"]
+    assert [c.bucket for c in b.plan(300)] == ["serve_p99"]
+    # 513 no longer fits the p99 cell: rides the bulk cell in one chunk
+    assert [c.bucket for c in b.plan(513)] == ["serve_bulk"]
+    # 5000 = 2×2048 bulk chunks + 904 remainder (too big for p99 ⇒ bulk)
+    assert [c.bucket for c in b.plan(5000)] == ["serve_bulk"] * 3
+
+
+@pytest.mark.parametrize("n", [1, 300, 513, 5000])
+def test_batcher_pad_unpad_roundtrip(n, rng):
+    b = _registry()
+    ids = rng.integers(0, 1000, size=(n, 4)).astype(np.int32)
+    got = np.empty_like(ids)
+    for chunk, padded, mask in b.split(ids):
+        assert padded.shape[0] == chunk.rows
+        assert mask.sum() == chunk.n_valid and mask[:chunk.n_valid].all()
+        assert (padded[chunk.n_valid:] == 0).all()  # id-0 padding stays valid
+        got[chunk.start:chunk.start + chunk.n_valid] = \
+            RequestBatcher.unpad(padded, chunk.n_valid)
+    np.testing.assert_array_equal(got, ids)
+
+
+def test_batcher_errors():
+    b = _registry()
+    with pytest.raises(ValueError):
+        b.plan(0)
+    with pytest.raises(ValueError):
+        RequestBatcher.pad(np.zeros((10, 2)), 4)
+    with pytest.raises(ValueError):
+        RequestBatcher().plan(5)  # no shapes registered
+
+
+# ---------------------------------------------------------------------------
+# cell cache
+# ---------------------------------------------------------------------------
+
+def test_cell_cache_hit_miss_compile_counts():
+    from repro.dist.mesh import host_mesh
+    from jax.sharding import PartitionSpec as P
+
+    cache = CellCache(host_mesh())
+    builds = {"n": 0}
+
+    def build():
+        builds["n"] += 1
+        step = lambda w, x: x @ w
+        specs = (jnp.ones((4, 2)), jax.ShapeDtypeStruct((8, 4), jnp.float32))
+        return step, specs, (P(None, None), P(None, None)), P(None, None), {}
+
+    key = cache.key("toy", "mm@8")
+    c1 = cache.get_or_compile(key, build)
+    assert (cache.compiles, cache.hits, builds["n"]) == (1, 0, 1)
+    c2 = cache.get_or_compile(key, build)
+    assert c2 is c1                      # warm executable returned as-is
+    assert (cache.compiles, cache.hits, builds["n"]) == (1, 1, 1)
+    # a different shape is a different executable
+    cache.get_or_compile(cache.key("toy", "mm@16"), build)
+    assert cache.compiles == 2 and builds["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end (score)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    """Tiny trained packed DLRM behind an engine with 64/256-row cells."""
+    cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=(600, 400, 500), train_steps=25, train_batch=256, seed=3)
+    engine = build_engine(cfg, params, state, buffers,
+                          p99_rows=64, bulk_rows=256)
+    return {"engine": engine, "cfg": cfg, "params": params, "state": state,
+            "buffers": buffers, "spec": spec}
+
+
+def _reference_logits(served, ids):
+    """Unbatched (no padding, no jit) packed-table scoring."""
+    logits, _, _ = DLRM.apply(served["params"], served["buffers"],
+                              served["state"], {"ids": jnp.asarray(ids)},
+                              served["cfg"], train=False)
+    return np.asarray(logits)
+
+
+@pytest.mark.parametrize("n", [1, 50, 300])
+def test_score_matches_unbatched_reference(served, n):
+    ds = SyntheticCTR(served["spec"]._replace(batch_size=n))
+    ids = ds.batch(777)["ids"]
+    got = served["engine"].score(ids, return_logits=True)
+    np.testing.assert_allclose(got, _reference_logits(served, ids),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_score_probabilities(served):
+    ds = SyntheticCTR(served["spec"]._replace(batch_size=10))
+    probs = served["engine"].score(ds.batch(778)["ids"])
+    assert probs.shape == (10,)
+    assert (probs > 0).all() and (probs < 1).all()
+
+
+def test_second_run_zero_recompiles(served):
+    """Acceptance criterion: repeat requests of the same shape never
+    recompile — they hit the warm executables from the cell cache."""
+    engine = served["engine"]
+    ds = SyntheticCTR(served["spec"]._replace(batch_size=300))
+    engine.score(ds.batch(1)["ids"])
+    compiles_before = engine.compile_count
+    engine.score(ds.batch(2)["ids"])     # same shape again
+    engine.score(ds.batch(3)["ids"])
+    assert engine.compile_count == compiles_before
+
+    # re-registering the same model on a shared cache is pure hits
+    twin = Engine(mesh=engine.mesh, cache=engine.cache)
+    twin.register_packed_model(
+        "dlrm", DLRM, served["cfg"], served["params"], served["state"],
+        served["buffers"], shapes={"serve_p99": 64, "serve_bulk": 256})
+    assert engine.cache.compiles == compiles_before
+    assert engine.cache.hits >= 4        # 2 score + 2 lookup cells re-keyed
+
+
+def test_stats_record_lookup_split(served):
+    engine = served["engine"]
+    ds = SyntheticCTR(served["spec"]._replace(batch_size=20))
+    engine.score(ds.batch(5)["ids"])
+    summary = engine.summary()
+    cell = summary["dlrm/serve_p99"]
+    assert cell["count"] >= 1
+    for k in ("p50_ms", "p99_ms", "lookup_p50_ms", "compute_p50_ms"):
+        assert cell[k] >= 0.0
+    assert cell["p50_ms"] <= cell["p99_ms"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# retrieval cell
+# ---------------------------------------------------------------------------
+
+def test_retrieve_matches_reference(rng):
+    from repro.embeddings.table import FieldSpec
+    from repro.models.two_tower import TwoTower, TwoTowerConfig
+
+    cfg = TwoTowerConfig(user_fields=(FieldSpec("u0", 50), FieldSpec("u1", 40)),
+                         item_fields=(FieldSpec("i0", 80),),
+                         d_embed=8, tower_hidden=(16, 8))
+    params, buffers, state = TwoTower.init(jax.random.PRNGKey(0), cfg)
+
+    # pack the (untrained) dense table directly — no pipeline needed
+    emb = np.asarray(params["embedding"]["emb"])
+    n, d = emb.shape
+    mpe = MPEConfig()
+    fbits = rng.integers(0, len(mpe.bits), size=(n,)).astype(np.int32)
+    alpha = np.full((len(mpe.bits),), 0.02, np.float32)
+    beta = np.zeros((d,), np.float32)
+    table, meta = build_packed_table(emb, fbits, alpha, beta, mpe)
+
+    scfg = cfg._replace(compressor="packed", comp_cfg=meta)
+    sparams = dict(params, embedding=table)
+    sbuffers = dict(buffers, embedding={})
+
+    engine = Engine()
+    engine.register(two_tower_retrieval_cell(
+        TwoTower, scfg, sparams, state, sbuffers, n_cands=128, top_k=10,
+        arch="tt"))
+
+    user = rng.integers(0, 40, size=(1, 2)).astype(np.int32)
+    cands = rng.integers(0, 80, size=(100, 1)).astype(np.int32)
+    scores, idx = engine.retrieve(user, cands)
+
+    ref_scores, ref_idx = TwoTower.retrieval_score(
+        sparams, sbuffers, state, jnp.asarray(user), jnp.asarray(cands),
+        scfg, top_k=10)
+    np.testing.assert_allclose(scores, np.asarray(ref_scores),
+                               rtol=1e-4, atol=1e-5)
+    assert (idx < 100).all()             # padded candidates never surface
+
+
+def test_retrieve_chunks_oversized_corpus(rng):
+    from repro.embeddings.table import FieldSpec
+    from repro.models.two_tower import TwoTower, TwoTowerConfig
+
+    cfg = TwoTowerConfig(user_fields=(FieldSpec("u0", 30),),
+                         item_fields=(FieldSpec("i0", 60),),
+                         d_embed=4, tower_hidden=(8, 4))
+    params, buffers, state = TwoTower.init(jax.random.PRNGKey(1), cfg)
+    emb = np.asarray(params["embedding"]["emb"])
+    mpe = MPEConfig()
+    fbits = np.full((emb.shape[0],), 6, np.int32)  # all rows widest bucket
+    table, meta = build_packed_table(
+        emb, fbits, np.full((len(mpe.bits),), 0.02, np.float32),
+        np.zeros((emb.shape[1],), np.float32), mpe)
+    scfg = cfg._replace(compressor="packed", comp_cfg=meta)
+    sparams = dict(params, embedding=table)
+    sbuffers = dict(buffers, embedding={})
+
+    engine = Engine()
+    engine.register(two_tower_retrieval_cell(
+        TwoTower, scfg, sparams, state, sbuffers, n_cands=64, top_k=5,
+        arch="tt"))
+    user = np.zeros((1, 1), np.int32)
+    cands = rng.integers(0, 60, size=(150, 1)).astype(np.int32)  # 3 chunks
+    scores, idx = engine.retrieve(user, cands)
+    assert scores.shape == (5,) and idx.shape == (5,)
+    assert (np.diff(scores) <= 1e-9).all()          # sorted descending
+    ref_scores, _ = TwoTower.retrieval_score(
+        sparams, sbuffers, state, jnp.asarray(user), jnp.asarray(cands),
+        scfg, top_k=5)
+    np.testing.assert_allclose(scores, np.asarray(ref_scores),
+                               rtol=1e-4, atol=1e-5)
+
+    # same arch/shape/avals but different static config (temperature) must
+    # NOT warm-hit the first executable — the fingerprint keys it apart
+    compiles = engine.compile_count
+    hot_cfg = scfg._replace(temperature=1.0)
+    engine.register(two_tower_retrieval_cell(
+        TwoTower, hot_cfg, sparams, state, sbuffers, n_cands=64, top_k=5,
+        arch="tt"))
+    assert engine.compile_count == compiles + 1
+    hot_scores, _ = engine.retrieve(user, cands[:64])
+    ref_hot, _ = TwoTower.retrieval_score(
+        sparams, sbuffers, state, jnp.asarray(user), jnp.asarray(cands[:64]),
+        hot_cfg, top_k=5)
+    np.testing.assert_allclose(hot_scores, np.asarray(ref_hot),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode cell (int8 KV cache on by default)
+# ---------------------------------------------------------------------------
+
+def test_decode_cell_int8_cache_default():
+    from repro.models.lm import LM, LMConfig
+
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                   head_dim=16, d_ff=64, vocab=50, remat=False)
+    params, buffers = LM.init(jax.random.PRNGKey(0), cfg)
+
+    engine = Engine()
+    engine.register(lm_decode_cell(cfg, params, buffers, batch=4, max_len=8,
+                                   arch="lm-tiny"))
+    assert engine.compile_count == 1
+
+    tokens = np.array([[3], [7], [11]], np.int32)      # b=3 rides the 4-cell
+    logits, caches = engine.decode(tokens)
+    assert logits.shape == (3, 50)
+    assert caches["k"].dtype == jnp.int8               # int8 default
+    assert "k_scale" in caches and int(caches["len"]) == 1
+    # scales calibrated from the first write, not the init constant
+    assert float(jnp.max(caches["k_scale"])) != pytest.approx(0.05)
+
+    logits2, caches = engine.decode(tokens[:, :1], caches)
+    assert int(caches["len"]) == 2
+    assert engine.compile_count == 1                   # still one executable
+    assert np.isfinite(logits2).all()

@@ -1,6 +1,4 @@
 """End-to-end behaviour tests for the paper's system (integration level)."""
-import collections
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -53,7 +51,6 @@ def test_bits_correlate_with_frequency(pipeline_result):
     g = len(gb)
     if g < 4:
         pytest.skip("too few groups")
-    ranks = np.arange(g)
     # Spearman-style: frequent half should average >= rare half
     head = gb[: g // 2].mean()
     tail = gb[g // 2:].mean()

@@ -10,7 +10,6 @@ from repro.data.synthetic import CTRSpec, SyntheticCTR
 from repro.embeddings.table import FieldSpec
 from repro.models.dlrm import DLRMConfig
 from repro.train.compression import (int8_compress, int8_decompress,
-                                     make_error_feedback_transform,
                                      rowsparse_compress, rowsparse_decompress)
 from repro.train.loop import Trainer
 from repro.train.optimizer import adam, warmup_cosine
@@ -53,8 +52,6 @@ def test_checkpoint_resume_bit_exact():
 def test_nan_guard_skips_update():
     ds, build = _tiny_setup()
     b = build(jax.random.PRNGKey(0), "plain", {})
-
-    poisoned = {"calls": 0}
 
     def loss_fn(params, buffers, state, batch, *, step=None):
         loss, aux = b["loss_fn"](params, buffers, state, batch, step=step)
