@@ -1,0 +1,159 @@
+"""Tiered-cache / async-prefetch benchmark → BENCH_prefetch.json.
+
+Two measurements (schema documented in benchmarks/README.md):
+
+  1. **Train-loop overlap** — the same tiny-DLRM training run executed with
+     the synchronous loop and with ``repro.cache.PrefetchPipeline`` staging
+     batches one step ahead; reports ms/step for both (the loops are
+     loss-identical — asserted in tests/test_cache.py — so the delta is pure
+     overlap).
+  2. **Hot-tier sweep** — a ``TieredTableStore`` over the quick-pipeline
+     packed table at several hot fractions, driven by a zipfian request
+     stream through ``Engine.score_tiered``: hit rate, cold bytes moved and
+     per-tier storage per fraction, plus overlapped vs synchronous tiered
+     scoring latency (p50) at each point.
+
+Runs on CPU (the CI artifact); the same script is the measurement harness on
+an accelerator, where tier placement (HBM vs host) is physical.
+
+    PYTHONPATH=src python benchmarks/prefetch_bench.py --smoke
+    PYTHONPATH=src python benchmarks/prefetch_bench.py --out benchmarks/artifacts/BENCH_prefetch.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.cache import TieredTableStore
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.embeddings.table import FieldSpec
+from repro.launch.serve import train_packed_dlrm
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.serve import Engine
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+from repro.zoo import dlrm_builder
+
+FULL = dict(field_vocabs=(3000, 2000, 1500, 1000), pipeline_steps=100,
+            train_steps=60, train_batch=2048, serve_steps=30, serve_batch=2048,
+            cell_rows=512, hot_fractions=(0.0, 0.1, 0.25, 0.5, 0.9, 1.0))
+SMOKE = dict(field_vocabs=(600, 400, 500), pipeline_steps=25,
+             train_steps=20, train_batch=512, serve_steps=8, serve_batch=512,
+             cell_rows=128, hot_fractions=(0.0, 0.1, 0.5, 1.0))
+
+
+def bench_train_overlap(cfg: dict) -> dict:
+    """ms/step of the synchronous vs prefetch-staged training loop."""
+    out = {}
+    for prefetch in (False, True):
+        spec = CTRSpec(field_vocabs=cfg["field_vocabs"],
+                       batch_size=cfg["train_batch"], seed=0)
+        ds = SyntheticCTR(spec)
+        fields = tuple(FieldSpec(f"f{i}", v)
+                       for i, v in enumerate(spec.field_vocabs))
+        base = DLRMConfig(fields=fields, d_embed=16, mlp_hidden=(64, 32),
+                          backbone="dnn")
+        b = dlrm_builder(base, ds.expected_frequencies())(
+            jax.random.PRNGKey(0), "plain", {})
+        tr = Trainer(b["loss_fn"], b["params"], b["buffers"], b["state"],
+                     adam(1e-3))
+        tr.run(lambda s: ds.batch(s), 3, log_every=0,
+               prefetch=prefetch)                     # compile + warm outside
+        t0 = time.perf_counter()
+        tr.run(lambda s: ds.batch(s), 3 + cfg["train_steps"], log_every=0,
+               prefetch=prefetch)
+        ms = (time.perf_counter() - t0) * 1e3 / cfg["train_steps"]
+        out["overlapped_ms_per_step" if prefetch
+            else "synchronous_ms_per_step"] = round(ms, 3)
+    out["speedup"] = round(out["synchronous_ms_per_step"]
+                           / max(out["overlapped_ms_per_step"], 1e-9), 3)
+    return out
+
+
+def bench_hot_sweep(cfg: dict) -> list[dict]:
+    """Hit rate / bytes moved / tiered-score latency per hot fraction."""
+    serve_cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=cfg["field_vocabs"], train_steps=cfg["pipeline_steps"],
+        train_batch=cfg["train_batch"])
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    req_ds = SyntheticCTR(spec._replace(batch_size=cfg["serve_batch"]))
+
+    points = []
+    for hf in cfg["hot_fractions"]:
+        store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                                 freqs, hf)
+        engine = Engine()
+        engine.register_tiered_model(
+            "dlrm", DLRM, serve_cfg, params, state, buffers, store,
+            shapes={"tiered": cfg["cell_rows"]})
+        timings = {True: [], False: []}
+        for step in range(cfg["serve_steps"]):
+            ids = req_ds.batch(10_000 + step)["ids"]
+            for overlap in (False, True):
+                t0 = time.perf_counter()
+                engine.score_tiered(ids, overlap=overlap)
+                timings[overlap].append((time.perf_counter() - t0) * 1e3)
+        skip = min(2, cfg["serve_steps"] - 1)
+        c = store.counters()
+        points.append({
+            "hot_fraction": hf,
+            "hit_rate": round(c["hit_rate"], 4),
+            "bytes_moved": c["bytes_moved"],
+            "hot_bytes": c["hot_bytes"],
+            "cold_bytes": c["cold_bytes"],
+            "score_p50_ms_synchronous": round(
+                float(np.percentile(timings[False][skip:], 50)), 3),
+            "score_p50_ms_overlapped": round(
+                float(np.percentile(timings[True][skip:], 50)), 3),
+        })
+        print(f"[prefetch_bench] hot={hf:<5} hit_rate={c['hit_rate']:.3f} "
+              f"moved={c['bytes_moved']}B "
+              f"sync_p50={points[-1]['score_p50_ms_synchronous']}ms "
+              f"overlap_p50={points[-1]['score_p50_ms_overlapped']}ms")
+    return points
+
+
+def run(cfg: dict) -> dict:
+    train = bench_train_overlap(cfg)
+    print(f"[prefetch_bench] train: sync={train['synchronous_ms_per_step']}ms "
+          f"overlapped={train['overlapped_ms_per_step']}ms "
+          f"(x{train['speedup']})")
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items()},
+        "env": {"jax": jax.__version__, "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "platform": platform.platform()},
+        "train": train,
+        "tiers": bench_hot_sweep(cfg),
+        "unix_time": int(time.time()),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny table + short streams (the CI data point)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default benchmarks/artifacts/"
+                         "BENCH_prefetch.json)")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or os.path.join("benchmarks", "artifacts",
+                                        "BENCH_prefetch.json")
+    result = run(dict(SMOKE if args.smoke else FULL,
+                      mode="smoke" if args.smoke else "full"))
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[prefetch_bench] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs link check — the blocking CI `docs` job.
+
+Validates that intra-repo references in the documentation actually exist:
+
+  1. every relative markdown link ``[text](target)`` in README.md, docs/ and
+     benchmarks/README.md resolves to a real file (anchors stripped; http/
+     mailto links skipped);
+  2. every backticked repo path (`src/...`, `scripts/verify.sh`, ...) with a
+     source-file extension exists — generated artifacts (``BENCH_*.json``,
+     paths under ``benchmarks/artifacts/``) are exempt.
+
+Exit code 0 when clean, 1 with a per-reference report otherwise. Run from
+anywhere: paths resolve against the repo root (this file's parent's parent).
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ["README.md", "docs/**/*.md", "benchmarks/README.md"]
+# markdown links, excluding images' URL part being external
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `backticked` repo-relative paths with a source-ish extension
+PATH_RE = re.compile(
+    r"`([A-Za-z0-9_.\-/]+\.(?:py|md|sh|yml|yaml|toml|json|txt))`")
+GENERATED = re.compile(r"(^|/)BENCH_[^/]*\.json$|^benchmarks/artifacts/|"
+                       r"^out\.json$")
+
+
+def doc_files() -> list[Path]:
+    files: list[Path] = []
+    for pattern in DOC_GLOBS:
+        files.extend(sorted(REPO.glob(pattern)))
+    # dedupe while keeping order
+    seen, out = set(), []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+def resolve(md_file: Path, target: str) -> bool:
+    """A target exists if it resolves relative to the md file's directory or
+    to the repo root (docs use both conventions)."""
+    return ((md_file.parent / target).exists()
+            or (REPO / target).exists())
+
+
+def check() -> int:
+    files = doc_files()
+    if not files:
+        print("check_docs: no documentation files found", file=sys.stderr)
+        return 1
+    errors = []
+    n_refs = 0
+    for md in files:
+        text = md.read_text(encoding="utf-8")
+        rel = md.relative_to(REPO)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            n_refs += 1
+            if not resolve(md, target):
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+        for m in PATH_RE.finditer(text):
+            target = m.group(1)
+            if GENERATED.search(target) or "/" not in target:
+                continue
+            n_refs += 1
+            if not resolve(md, target):
+                errors.append(f"{rel}: referenced path missing -> {target}")
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(f"check_docs: {len(files)} files, {n_refs} intra-repo references, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())

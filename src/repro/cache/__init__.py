@@ -1,0 +1,27 @@
+"""Tiered embedding cache + async prefetch (ROADMAP scaling item).
+
+Two layers:
+
+  ``tiers``    — ``TieredTableStore``: splits an MPE packed table by feature
+                 frequency into a device-resident hot tier (row-shards like
+                 the monolithic table; see ``dist.sharding.tiered_hot_pspecs``)
+                 and a host-memory cold tier whose rows move as packed words
+                 on demand. Bit-exact against ``core.inference.packed_lookup``
+                 at every hot fraction; per-tier hit/miss/byte counters.
+  ``prefetch`` — ``PrefetchPipeline``: double-buffers the next batch's
+                 host→device staging (and optionally its cold-row fills)
+                 against the current step's compute. Same bytes, one step
+                 earlier: losses are step-identical to the synchronous loop.
+
+Consumers: ``train.loop.Trainer(run(..., prefetch=True))``,
+``serve.Engine.register_tiered_model``/``score_tiered``, and
+``benchmarks/prefetch_bench.py`` (→ ``BENCH_prefetch.json``).
+"""
+from repro.cache.prefetch import PrefetchPipeline
+from repro.cache.tiers import (ColdPrefetch, TieredTableStore,
+                               tiered_hot_lookup, tiered_hot_lookup_fn)
+
+__all__ = [
+    "TieredTableStore", "ColdPrefetch", "tiered_hot_lookup",
+    "tiered_hot_lookup_fn", "PrefetchPipeline",
+]

@@ -1,0 +1,300 @@
+"""Hot/cold tiered storage for MPE packed tables.
+
+MPE's frequency-grouped precision assignment (paper §3.2/§4.1) hands the
+serving layer a ready-made cache policy: the high-frequency features that get
+wide precision are exactly the rows worth pinning device-resident, while the
+long tail can live in host memory and be fetched per request — the split
+*Mixed-Precision Embedding Using a Cache* (Yang et al., 2020) validates at
+production scale.
+
+``TieredTableStore`` splits each per-width packed subtable of a
+``core.inference.build_packed_table`` pytree into
+
+  - a **hot tier**: the top-``hot_fraction`` features by frequency, kept as
+    device arrays (HBM on an accelerator). The hot tier is a pytree shaped
+    for ``repro.dist.sharding.tiered_hot_pspecs`` — it row-shards over the
+    mesh exactly like the monolithic table; the cold tier never does.
+  - a **cold tier**: the remaining rows as host ``np.ndarray``s. A lookup
+    that touches them gathers the *packed words* on the host and moves only
+    those bytes over PCIe (``jax.device_put``), so the transfer inherits the
+    table's compression ratio.
+
+Lookups are bit-exact against ``core.inference.packed_lookup`` on the
+monolithic table at every hot fraction: both tiers gather the same packed
+words, unpack with the same static shifts and dequantize with the same
+``α_b · code + β`` expression, and the tier merge is a ``jnp.where`` on the
+tier mask (never an add), so no float combine can perturb a row.
+
+Per-tier hit/miss/byte counters are first-class — ``counters()`` backs the
+hit-rate-vs-hot-fraction curve in ``benchmarks/prefetch_bench.py`` and the
+hand-computed trace asserted in ``tests/test_cache.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.inference import _pad_rows, _auto_pad_multiple
+from repro.core.quantizer import int_bounds
+from repro.embeddings.frequency import hot_feature_mask
+
+
+class ColdPrefetch(NamedTuple):
+    """In-flight cold-row fill for one id batch.
+
+    Produced by ``TieredTableStore.prefetch_cold`` — the host gather has
+    happened and the ``jax.device_put`` of the packed words has been
+    *issued* (asynchronously) but not awaited, so creating one of these a
+    step ahead overlaps the host→device copy with the current step's
+    compute. Consumed by ``cold_part``/``lookup``.
+    """
+    n: int                 # flat batch size the fill covers
+    parts: tuple           # ((width_index, positions, device_words), ...)
+    bytes_moved: int       # packed bytes issued host→device
+
+
+class TieredTableStore:
+    """Frequency-split hot/cold view of one packed inference table.
+
+    ``table``/``meta`` are the pytree + static metadata from
+    ``build_packed_table``; ``frequencies`` is any per-feature access-count
+    vector (training-log counts or the Zipf profile); ``hot_fraction`` pins
+    the top fraction of features device-resident (0 = everything cold,
+    1 = everything hot — both degenerate tiers stay valid).
+
+    ``row_pad_multiple`` pads hot-subtable rows the same way the monolithic
+    table pads (size-aware power of two, 512 at production scale) so the hot
+    tier row-shards cleanly under ``tiered_hot_pspecs``.
+    """
+
+    def __init__(self, table, meta, frequencies, hot_fraction: float, *,
+                 row_pad_multiple: int | None = None, device=None):
+        self.meta = {"bits": tuple(meta["bits"]), "d": int(meta["d"]),
+                     "n": int(meta["n"])}
+        self.hot_fraction = float(hot_fraction)
+        self.device = device
+        bits, d, n = self.meta["bits"], self.meta["d"], self.meta["n"]
+
+        width_idx = np.asarray(table["width_idx"])
+        local_idx = np.asarray(table["local_idx"])
+        is_hot = hot_feature_mask(frequencies, hot_fraction)
+        # zero-width features never occupy a subtable row: serve them from
+        # the hot tier (their embedding is the zero vector — no bytes at all)
+        for i, b in enumerate(bits):
+            if b == 0:
+                is_hot[width_idx == i] = True
+
+        if row_pad_multiple is None:
+            n_widths = sum(1 for b in bits if b != 0)
+            row_pad_multiple = _auto_pad_multiple(max(int(is_hot.sum()), 1),
+                                                  max(n_widths, 1))
+
+        tier_local = np.zeros((n,), np.int32)
+        hot_subs, cold_subs = {}, {}
+        hot_bytes = cold_bytes = 0
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue
+            sub = np.asarray(table["subtables"][f"b{b}"])       # (rows_p, W)
+            feats = np.nonzero(width_idx == i)[0]
+            hot_f = feats[is_hot[feats]]
+            cold_f = feats[~is_hot[feats]]
+            tier_local[hot_f] = np.arange(hot_f.size, dtype=np.int32)
+            tier_local[cold_f] = np.arange(cold_f.size, dtype=np.int32)
+            # pad hot rows like build_packed_table pads (all-N_b rows), so
+            # row shards stay aligned to whole packed rows
+            n_b, _ = int_bounds(b)
+            pad_row = np.asarray(
+                packing.pack_codes(jnp.full((1, d), n_b, jnp.int32), b))
+            padded = _pad_rows(hot_f.size, row_pad_multiple)
+            hot_rows = np.tile(pad_row, (padded, 1))
+            hot_rows[:hot_f.size] = sub[local_idx[hot_f]]
+            hot_subs[f"b{b}"] = jax.device_put(jnp.asarray(hot_rows), device)
+            cold_subs[f"b{b}"] = np.ascontiguousarray(sub[local_idx[cold_f]])
+            hot_bytes += hot_f.size * packing.row_bytes(d, b)
+            cold_bytes += cold_f.size * packing.row_bytes(d, b)
+
+        # host-side routing vectors (the cold path plans gathers with them)
+        self._is_hot_np = is_hot
+        self._width_idx_np = width_idx
+        self._tier_local_np = tier_local
+        self._cold_subs = cold_subs
+
+        # device-resident hot tier: the pytree a serve cell binds (layout
+        # contract: repro.dist.sharding.tiered_hot_pspecs)
+        self.hot = {
+            "subtables": hot_subs,
+            "tier_local": jax.device_put(jnp.asarray(tier_local), device),
+            "is_hot": jax.device_put(jnp.asarray(is_hot), device),
+            "width_idx": jax.device_put(jnp.asarray(width_idx.astype(np.int32)),
+                                        device),
+            "alpha": jax.device_put(jnp.asarray(table["alpha"]), device),
+            "beta": jax.device_put(jnp.asarray(table["beta"]), device),
+        }
+        self._storage = {"hot_bytes": int(hot_bytes),
+                         "cold_bytes": int(cold_bytes)}
+        self.reset_counters()
+
+    # -- counters -----------------------------------------------------------
+
+    def reset_counters(self):
+        self._counters = {"hot_lookups": 0, "cold_lookups": 0,
+                          "bytes_moved": 0, "prefetches": 0}
+
+    def counters(self) -> dict:
+        """Cumulative tier traffic: ``hot_lookups``/``cold_lookups`` count id
+        lookups served per tier, ``bytes_moved`` the packed host→device bytes
+        of cold fills, ``hit_rate`` their ratio, plus the static per-tier
+        storage bytes."""
+        c = dict(self._counters, **self._storage)
+        total = c["hot_lookups"] + c["cold_lookups"]
+        c["hit_rate"] = c["hot_lookups"] / total if total else 1.0
+        return c
+
+    # -- cold tier (host side) ----------------------------------------------
+
+    def prefetch_cold(self, ids, valid=None) -> ColdPrefetch:
+        """Gather the batch's cold rows on the host and *issue* their async
+        device transfer. Call this one step (or one chunk) ahead of the
+        compute that consumes it — ``jax.device_put`` returns immediately,
+        so the copy overlaps whatever is already dispatched.
+
+        ``valid``: optional boolean mask over ``ids`` (or over its leading
+        axis — e.g. the batcher's per-row validity mask) — invalid entries
+        are batcher padding: they fetch nothing and stay out of the
+        counters, so hit rates and bytes reflect real traffic only.
+
+        Row counts are padded up to powers of two so the downstream eager
+        unpack/scatter in ``cold_part`` sees a handful of stable shapes
+        (shape-churn would compile a fresh executable per request); padded
+        entries carry an out-of-bounds position, which the scatter drops.
+        ``bytes_moved`` counts the real rows only."""
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        if valid is None:
+            valid_flat = np.ones(flat.shape, bool)
+        else:
+            valid = np.asarray(valid, bool)
+            if valid.shape != ids.shape:   # per-row mask -> per-id mask
+                valid = np.broadcast_to(valid.reshape(valid.shape[0],
+                                                      *([1] * (ids.ndim - 1))),
+                                        ids.shape)
+            valid_flat = valid.reshape(-1)
+        widx = self._width_idx_np[flat]
+        lidx = self._tier_local_np[flat]
+        cold = ~self._is_hot_np[flat] & valid_flat
+        parts, nbytes = [], 0
+        for i, b in enumerate(self.meta["bits"]):
+            if b == 0:
+                continue
+            sub = self._cold_subs[f"b{b}"]
+            sel = np.nonzero(cold & (widx == i))[0]
+            if sel.size == 0 or sub.shape[0] == 0:
+                continue
+            rows = sub[lidx[sel]]                         # (k, W) host gather
+            nbytes += rows.nbytes
+            padded = 1 << max(int(np.ceil(np.log2(sel.size))), 3)
+            pos = np.full((padded,), flat.size, np.int32)  # OOB pads: dropped
+            pos[:sel.size] = sel
+            rows_p = np.zeros((padded, rows.shape[1]), rows.dtype)
+            rows_p[:sel.size] = rows
+            parts.append((i, pos,
+                          jax.device_put(jnp.asarray(rows_p), self.device)))
+        self._counters["prefetches"] += 1
+        self._counters["hot_lookups"] += int(valid_flat.sum() - cold.sum())
+        self._counters["cold_lookups"] += int(cold.sum())
+        self._counters["bytes_moved"] += int(nbytes)
+        return ColdPrefetch(n=int(flat.size), parts=tuple(parts),
+                            bytes_moved=int(nbytes))
+
+    def cold_part(self, fill: ColdPrefetch) -> jnp.ndarray:
+        """Dequantize an in-flight cold fill into a dense ``(n, d)`` fp32
+        array (zeros at hot positions) — bit-exact against ``packed_lookup``
+        (asserted in tests/test_cache.py).
+
+        The integer work (unpack + scatter, jitted — fusion cannot perturb
+        integer ops; the pow-2 padding of ``prefetch_cold`` keeps the shape
+        cache tiny) lands the codes in a dense grid; the float dequant then
+        runs as whole-array *eager* ops, because compiling the dequant lets
+        LLVM contract its mul+add into a single-rounding FMA that differs
+        from the reference by 1 ulp."""
+        bits, d = self.meta["bits"], self.meta["d"]
+        codes_grid = jnp.zeros((fill.n, d), jnp.int32)
+        wgrid = jnp.full((fill.n,), -1, jnp.int32)
+        for i, pos, words in fill.parts:
+            codes_grid, wgrid = _scatter_codes(bits[i], d, codes_grid, wgrid,
+                                               jnp.asarray(pos), words, i)
+        alpha_vec = jnp.take(self.hot["alpha"], jnp.maximum(wgrid, 0), axis=0)
+        deq = alpha_vec[:, None] * codes_grid.astype(jnp.float32) \
+            + self.hot["beta"]
+        return jnp.where((wgrid >= 0)[:, None], deq, 0.0)
+
+    # -- full lookup --------------------------------------------------------
+
+    def lookup(self, ids, fill: ColdPrefetch | None = None) -> jnp.ndarray:
+        """ids: any int shape -> (*ids.shape, d) fp32 — bit-exact against
+        ``packed_lookup`` on the monolithic table. Pass a ``fill`` from an
+        earlier ``prefetch_cold(ids)`` to consume an overlapped transfer;
+        otherwise the cold fetch happens synchronously here."""
+        ids = jnp.asarray(ids)
+        if fill is None:
+            fill = self.prefetch_cold(np.asarray(ids))
+        flat = ids.reshape(-1)
+        hot = tiered_hot_lookup(self.hot, self.meta["bits"], self.meta["d"],
+                                flat)
+        is_hot = jnp.take(self.hot["is_hot"], flat, axis=0)
+        out = jnp.where(is_hot[:, None], hot, self.cold_part(fill))
+        return out.reshape(*ids.shape, self.meta["d"])
+
+    def storage(self) -> dict:
+        """Static per-tier packed bytes (pad-free)."""
+        return dict(self._storage)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _scatter_codes(b: int, d: int, codes_grid, wgrid, pos, words, width_i):
+    """Unpack one width's cold rows and scatter the integer codes (and the
+    width id) into the dense grids. Out-of-bounds positions (the pow-2
+    padding of ``prefetch_cold``) are dropped by jax scatter semantics."""
+    codes = packing.unpack_codes(words, b, d)
+    return (codes_grid.at[pos].set(codes),
+            wgrid.at[pos].set(jnp.int32(width_i)))
+
+
+def tiered_hot_lookup(hot, bits, d: int, ids: jnp.ndarray) -> jnp.ndarray:
+    """Device-local gather from a hot tier: ids (any int shape) ->
+    (*ids.shape, d) fp32, **zeros at cold positions**.
+
+    Mirrors ``core.inference.packed_lookup`` bucket by bucket (same unpack
+    shifts, same dequant expression) but reads the hot subtables and masks on
+    the tier bit as well as the width bucket. Pure jnp + static shapes: safe
+    to close over in a jitted serve cell, shards under
+    ``tiered_hot_pspecs``.
+    """
+    flat = ids.reshape(-1)
+    widx = jnp.take(hot["width_idx"], flat, axis=0)
+    lidx = jnp.take(hot["tier_local"], flat, axis=0)
+    is_hot = jnp.take(hot["is_hot"], flat, axis=0)
+    out = jnp.zeros((flat.shape[0], d), jnp.float32)
+    for i, b in enumerate(bits):
+        if b == 0:
+            continue
+        sub = hot["subtables"][f"b{b}"]
+        words = jnp.take(sub, jnp.clip(lidx, 0, sub.shape[0] - 1), axis=0)
+        codes = packing.unpack_codes(words, b, d)
+        deq = hot["alpha"][i] * codes.astype(jnp.float32) + hot["beta"]
+        out = jnp.where((is_hot & (widx == i))[:, None], deq, out)
+    return out.reshape(*ids.shape, d)
+
+
+def tiered_hot_lookup_fn(bits, d: int):
+    """``tiered_hot_lookup`` with the static metadata bound:
+    ``(hot_tree, ids) -> embeddings``. Jit-stable the same way
+    ``core.inference.packed_lookup_fn`` is."""
+    bits = tuple(bits)
+    return lambda hot, ids: tiered_hot_lookup(hot, bits, d, ids)

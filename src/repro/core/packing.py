@@ -20,6 +20,16 @@ def words_per_row(d: int, b: int) -> int:
     return -(-d * b // 32)  # ceil
 
 
+def row_bytes(d: int, b: int) -> int:
+    """Stored bytes of one packed row of ``d`` codes at ``b`` bits.
+
+    This is the unit of host→device traffic for a cold-tier row fill
+    (``repro.cache.tiers``): a miss moves the *packed* words, not the
+    dequantized fp32 vector, so the transfer inherits the compression ratio.
+    """
+    return words_per_row(d, b) * 4
+
+
 def pack_codes(codes: jnp.ndarray, b: int) -> jnp.ndarray:
     """codes: (n, d) signed ints in [N_b, P_b] -> (n, W) uint32."""
     n, d = codes.shape

@@ -39,7 +39,7 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
                      mpe_cfg: MPEConfig, optimizer, search_steps: int,
                      retrain_steps: int, retrain_mode: str = "mpe",
                      eval_fn: Callable | None = None, log_fn=print,
-                     ckpt_dir: str | None = None) -> dict:
+                     ckpt_dir: str | None = None, prefetch: bool = False) -> dict:
     comp_cfg = mpe_cfg._asdict()
 
     # ---------------- phase 1: precision search ----------------
@@ -51,7 +51,7 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
                       ckpt_dir=None if ckpt_dir is None else f"{ckpt_dir}/search")
     trainer.restore()
     log_fn(f"[mpe] search phase: {search_steps} steps")
-    trainer.run(data_fn, search_steps, log_fn=log_fn)
+    trainer.run(data_fn, search_steps, log_fn=log_fn, prefetch=prefetch)
     # host snapshots: the trainers donate their carries, so later phases must
     # not alias live device arrays from this one.
     search_params = jax.tree.map(np.asarray, trainer.params)
@@ -103,7 +103,7 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
     if steps:
         trainer2.restore()
         log_fn(f"[mpe] retrain phase ({retrain_mode}): {steps} steps")
-        trainer2.run(data_fn, steps, log_fn=log_fn)
+        trainer2.run(data_fn, steps, log_fn=log_fn, prefetch=prefetch)
     final_params = trainer2.params
 
     # ---------------- phase 4: packed export ----------------

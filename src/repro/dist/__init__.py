@@ -10,15 +10,17 @@ from repro.dist.mesh import (current_mesh, host_mesh, make_device_mesh,
                              use_mesh)
 from repro.dist.sharding import (cell_shardings, current_dp_axes, dp_axes,
                                  lm_batch_pspecs, lm_cache_pspecs,
-                                 lm_param_pspecs, maybe_shard,
+                                 lm_kv_cache_pspecs, lm_param_pspecs,
+                                 maybe_shard, packed_serve_pspecs,
                                  packed_table_pspecs, recsys_table_pspecs,
                                  replicate_like, shard_batch_dim,
-                                 tree_named_shardings)
+                                 tiered_hot_pspecs, tree_named_shardings)
 
 __all__ = [
     "use_mesh", "current_mesh", "make_device_mesh", "host_mesh",
     "dp_axes", "current_dp_axes", "maybe_shard", "shard_batch_dim",
     "tree_named_shardings", "replicate_like", "cell_shardings",
-    "lm_batch_pspecs", "lm_cache_pspecs", "lm_param_pspecs",
-    "recsys_table_pspecs", "packed_table_pspecs",
+    "lm_batch_pspecs", "lm_cache_pspecs", "lm_kv_cache_pspecs",
+    "lm_param_pspecs", "recsys_table_pspecs", "packed_table_pspecs",
+    "packed_serve_pspecs", "tiered_hot_pspecs",
 ]

@@ -228,6 +228,27 @@ def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
     }
 
 
+def tiered_hot_pspecs(hot_sds, *, rows_axes=("model",)):
+    """Pspecs for the **hot tier** of a ``repro.cache.TieredTableStore``.
+
+    The hot tier is the device-resident half of the hot/cold split and the
+    only half that ever sees the mesh — the cold tier lives in host memory
+    and reaches devices per request as already-placed ``device_put`` fills.
+    Hot subtables row-shard over ``rows_axes`` exactly like the monolithic
+    ``packed_table_pspecs`` layout (rows padded to the same multiples, so
+    shard boundaries land on whole packed rows); the id→(tier, local row)
+    routing vectors and the dequant params replicate, as every device
+    resolves every id."""
+    return {
+        "subtables": {k: P(rows_axes, None) for k in hot_sds["subtables"]},
+        "tier_local": P(None),
+        "is_hot": P(None),
+        "width_idx": P(None),
+        "alpha": P(None),
+        "beta": P(None),
+    }
+
+
 def packed_serve_pspecs(params, *, rows_axes=("model",),
                         row_keys=("wide", "fm_linear")):
     """Full param-tree pspecs for a model serving from a packed table.

@@ -1,6 +1,8 @@
 from repro.embeddings.table import FieldSpec, field_offsets, globalize_ids
 from repro.embeddings.bag import embedding_bag, segment_mean
-from repro.embeddings.frequency import zipf_frequencies, count_frequencies
+from repro.embeddings.frequency import (zipf_frequencies, count_frequencies,
+                                        hot_feature_mask)
 
 __all__ = ["FieldSpec", "field_offsets", "globalize_ids", "embedding_bag",
-           "segment_mean", "zipf_frequencies", "count_frequencies"]
+           "segment_mean", "zipf_frequencies", "count_frequencies",
+           "hot_feature_mask"]

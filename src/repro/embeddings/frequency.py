@@ -20,6 +20,29 @@ def zipf_frequencies(n: int, exponent: float = 1.1, seed: int | None = None) -> 
     return f / f.sum()
 
 
+def hot_feature_mask(frequencies, hot_fraction: float) -> np.ndarray:
+    """Boolean mask of the top-``hot_fraction`` features by access frequency.
+
+    The MPE grouping sorts features by frequency to assign precision (§3.2);
+    the same ordering drives the hot/cold cache split of ``repro.cache``:
+    the ``ceil(hot_fraction * n)`` most frequent features are pinned in the
+    device-resident hot tier, the long tail stays in host memory. Ties are
+    broken by feature id (stable), so the split is deterministic.
+
+    ``hot_fraction`` 0 pins nothing, 1 pins everything.
+    """
+    f = np.asarray(frequencies, np.float64).reshape(-1)
+    if not 0.0 <= hot_fraction <= 1.0:
+        raise ValueError(f"hot_fraction must be in [0, 1], got {hot_fraction}")
+    n_hot = int(np.ceil(hot_fraction * f.shape[0]))
+    mask = np.zeros(f.shape, bool)
+    if n_hot:
+        # stable sort on (-freq, id): deterministic under ties
+        order = np.lexsort((np.arange(f.shape[0]), -f))
+        mask[order[:n_hot]] = True
+    return mask
+
+
 def count_frequencies(id_batches, n: int) -> np.ndarray:
     """Exact counts over an iterable of integer-array batches."""
     counts = np.zeros((n,), np.int64)

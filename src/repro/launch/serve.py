@@ -62,14 +62,23 @@ def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
 
 
 def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
-                 bulk_rows: int = 4096, lookup_split: bool = True) -> Engine:
-    """An engine with the standard cell-shape registry for one DLRM table."""
+                 bulk_rows: int = 4096, lookup_split: bool = True,
+                 store=None) -> Engine:
+    """An engine with the standard cell-shape registry for one DLRM table.
+
+    With a ``repro.cache.TieredTableStore`` in ``store``, the same shapes are
+    additionally registered as tiered cells (``tiered_p99``/``tiered_bulk``)
+    served through ``engine.score_tiered``."""
     from repro.models.dlrm import DLRM
     engine = Engine()
     engine.register_packed_model(
         "dlrm", DLRM, cfg, params, state, buffers,
         shapes={"serve_p99": p99_rows, "serve_bulk": bulk_rows},
         lookup_split=lookup_split)
+    if store is not None:
+        engine.register_tiered_model(
+            "dlrm", DLRM, cfg, params, state, buffers, store,
+            shapes={"tiered_p99": p99_rows, "tiered_bulk": bulk_rows})
     return engine
 
 
@@ -87,6 +96,11 @@ def main(argv=None):
                     help="serve_bulk cell capacity")
     ap.add_argument("--bulk", type=int, default=0,
                     help="also issue one bulk job of this many rows")
+    ap.add_argument("--hot-frac", type=float, default=None,
+                    help="also serve through a hot/cold TieredTableStore "
+                         "pinning this fraction of features device-resident "
+                         "(repro.cache; requests go through score_tiered "
+                         "with cold fills prefetched one chunk ahead)")
     ap.add_argument("--json", default=None,
                     help="write the latency/compile summary to this path")
     args = ap.parse_args(argv)
@@ -96,8 +110,19 @@ def main(argv=None):
     print(f"[serve] packed table: ratio={res['storage_ratio']:.4f} "
           f"bytes={res['packed_bytes']}")
 
+    store = None
+    if args.hot_frac is not None:
+        from repro.cache import TieredTableStore
+        freqs = SyntheticCTR(spec).expected_frequencies()
+        store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                                 freqs, args.hot_frac)
+        s = store.storage()
+        print(f"[serve] tiered store: hot_frac={args.hot_frac} "
+              f"hot={s['hot_bytes']}B (device) cold={s['cold_bytes']}B (host)")
+
     engine = build_engine(cfg, params, state, buffers,
-                          p99_rows=args.p99_rows, bulk_rows=args.bulk_rows)
+                          p99_rows=args.p99_rows, bulk_rows=args.bulk_rows,
+                          store=store)
     print(f"[serve] registered cells: "
           f"{dict(sorted(engine.registered_shapes.items()))} "
           f"(compiles={engine.compile_count})")
@@ -105,10 +130,16 @@ def main(argv=None):
     # request stream at the *requested* batch size — decoupled from training
     req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
     for step in range(args.steps):
-        engine.score(req_ds.batch(10_000 + step)["ids"])
+        ids = req_ds.batch(10_000 + step)["ids"]
+        engine.score(ids)
+        if store is not None:
+            engine.score_tiered(ids)
     if args.bulk:
         bulk_ds = SyntheticCTR(spec._replace(batch_size=args.bulk))
-        engine.score(bulk_ds.batch(99_999)["ids"])
+        bulk_ids = bulk_ds.batch(99_999)["ids"]
+        engine.score(bulk_ids)
+        if store is not None:
+            engine.score_tiered(bulk_ids)
 
     skip = min(3, max(args.steps - 1, 0))  # drop compile-adjacent warmup
     print(f"[serve] batch={args.batch} steps={args.steps}"
@@ -117,12 +148,18 @@ def main(argv=None):
     counters = engine.counters()
     print(f"[serve] cell cache: compiles={counters['compiles']} "
           f"hits={counters['hits']} (warm process ⇒ zero recompiles)")
+    if store is not None:
+        c = store.counters()
+        print(f"[serve] tiers: hit_rate={c['hit_rate']:.3f} "
+              f"cold_bytes_moved={c['bytes_moved']}")
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"batch": args.batch, "steps": args.steps,
                        "cells": engine.summary(skip_warmup=skip),
                        "cache": counters,
+                       "tiers": (store.counters() if store is not None
+                                 else None),
                        "storage_ratio": res["storage_ratio"],
                        "packed_bytes": res["packed_bytes"]}, f, indent=2)
         print(f"[serve] wrote {args.json}")

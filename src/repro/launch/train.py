@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--lam", type=float, default=3e-5)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="stage batches on device one step ahead of compute "
+                         "(repro.cache.PrefetchPipeline); loss-identical to "
+                         "the synchronous loop")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -71,7 +75,7 @@ def main():
             search_steps=args.steps,
             retrain_steps=args.retrain_steps or args.steps,
             eval_fn=build(jax.random.PRNGKey(args.seed), "plain", {})["eval_fn"],
-            ckpt_dir=args.ckpt_dir)
+            ckpt_dir=args.ckpt_dir, prefetch=args.prefetch)
         print(f"[train] MPE ratio={res['storage_ratio']:.4f} "
               f"avg_bits={res['avg_bits']:.2f} eval={res['eval']}")
         return
@@ -95,7 +99,7 @@ def main():
                       bundle["state"], adam(args.lr), ckpt_dir=args.ckpt_dir,
                       post_update=post)
     trainer.restore()
-    trainer.run(lambda s: ds.batch(s), args.steps)
+    trainer.run(lambda s: ds.batch(s), args.steps, prefetch=args.prefetch)
     ev = bundle["eval_fn"](trainer.params, bundle["buffers"], trainer.state)
     r = comp.storage_ratio(trainer.params["embedding"],
                            bundle["buffers"]["embedding"], comp_cfg)

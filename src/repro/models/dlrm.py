@@ -70,13 +70,14 @@ class DLRM:
         return params, buffers, state
 
     @staticmethod
-    def apply(params, buffers, state, batch, cfg: DLRMConfig, *,
-              train: bool = False, step=None):
-        """Returns (logits (B,), new_state, reg_loss)."""
-        comp = get_compressor(cfg.compressor)
-        gids = batch["ids"] + buffers["offsets"][None, :]
-        emb = comp.lookup(params["embedding"], buffers["embedding"], gids,
-                          cfg.comp_cfg, train=train, step=step)  # (B, F, d)
+    def interact(params, state, emb, gids, cfg: DLRMConfig, *,
+                 train: bool = False):
+        """The post-lookup half of ``apply``: interaction branch + MLP head
+        over pre-gathered embeddings ``emb (B, F, d)``. Split out so serving
+        paths that gather embeddings elsewhere (the tiered hot/cold store in
+        ``repro.cache``) reuse the exact compute graph. ``gids`` are the
+        globalized ids (only the DeepFM first-order term reads them).
+        Returns (logits (B,), new_state)."""
         b, f, d = emb.shape
         flat = emb.reshape(b, f * d)
 
@@ -93,9 +94,20 @@ class DLRM:
         elif cfg.backbone == "deepfm":
             first = jnp.sum(jnp.take(params["fm_linear"], gids, axis=0), axis=1)
             logit = logit + first + fm_second_order(emb) + params["fm_bias"]
+        return logit, {"mlp": new_mlp_state}
 
+    @staticmethod
+    def apply(params, buffers, state, batch, cfg: DLRMConfig, *,
+              train: bool = False, step=None):
+        """Returns (logits (B,), new_state, reg_loss)."""
+        comp = get_compressor(cfg.compressor)
+        gids = batch["ids"] + buffers["offsets"][None, :]
+        emb = comp.lookup(params["embedding"], buffers["embedding"], gids,
+                          cfg.comp_cfg, train=train, step=step)  # (B, F, d)
+        logit, new_state = DLRM.interact(params, state, emb, gids, cfg,
+                                         train=train)
         reg = comp.reg_loss(params["embedding"], buffers["embedding"], cfg.comp_cfg)
-        return logit, {"mlp": new_mlp_state}, reg
+        return logit, new_state, reg
 
     @staticmethod
     def loss_fn(params, buffers, state, batch, cfg: DLRMConfig, *,

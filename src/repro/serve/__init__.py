@@ -13,13 +13,15 @@ Three layers, composable bottom-up:
                  lookup-vs-compute split.
 
 ``repro.serve.cells`` holds the serve-cell builders, shared with the dry-run
-harness in ``repro.launch.cells``.
+harness in ``repro.launch.cells``. Tiered (hot/cold) serving builds on
+``repro.cache``: ``Engine.register_tiered_model`` + ``Engine.score_tiered``
+gather hot rows device-locally and overlap cold-row fills with compute.
 """
 from repro.serve.batcher import Chunk, RequestBatcher
 from repro.serve.cache import CellCache, CellKey, CompiledCell, mesh_signature
 from repro.serve.cells import (ServeCellDef, lm_decode_cell, packed_lookup_cell,
                                packed_score_cell, packed_score_step,
-                               two_tower_retrieval_cell)
+                               tiered_score_cell, two_tower_retrieval_cell)
 from repro.serve.engine import Engine
 from repro.serve.stats import LatencyStats
 
@@ -27,6 +29,6 @@ __all__ = [
     "CellCache", "CellKey", "CompiledCell", "mesh_signature",
     "Chunk", "RequestBatcher", "LatencyStats",
     "ServeCellDef", "packed_score_cell", "packed_score_step",
-    "packed_lookup_cell", "two_tower_retrieval_cell", "lm_decode_cell",
-    "Engine",
+    "packed_lookup_cell", "tiered_score_cell", "two_tower_retrieval_cell",
+    "lm_decode_cell", "Engine",
 ]

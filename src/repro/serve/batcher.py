@@ -23,6 +23,9 @@ import numpy as np
 
 
 class Chunk(NamedTuple):
+    """One slice of a planned request: which registered bucket serves rows
+    ``[start, start + n_valid)`` of the original request, padded up to the
+    bucket's compiled capacity ``rows``."""
     bucket: str      # registered shape name
     rows: int        # bucket capacity (the compiled leading dim)
     start: int       # offset of this chunk in the request

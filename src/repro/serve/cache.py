@@ -30,6 +30,9 @@ def mesh_signature(mesh) -> str:
 
 
 class CellKey(NamedTuple):
+    """Identity of one compiled serving executable: the same (arch, shape)
+    on a different mesh — or with different static config baked into the
+    shape string's fingerprint — is a different executable."""
     arch: str        # model/architecture identity, e.g. "dlrm"
     shape: str       # shape name + capacity + static-config digest,
                      # e.g. "serve_p99@512#3f9ab2c41d07" (see
@@ -39,6 +42,9 @@ class CellKey(NamedTuple):
 
 
 class CompiledCell(NamedTuple):
+    """A warm AOT-compiled serving executable plus the explicit in/out
+    ``NamedSharding``s it was compiled with (callers ``device_put`` request
+    inputs to ``in_shardings`` before dispatch) and its compile cost."""
     key: CellKey
     compiled: Any          # jax.stages.Compiled — call as compiled(*args)
     in_shardings: tuple    # NamedSharding pytrees, one per positional arg
@@ -48,6 +54,12 @@ class CompiledCell(NamedTuple):
 
 
 class CellCache:
+    """Compile-once memo of serving executables, keyed by ``CellKey``.
+
+    ``get_or_compile`` AOT-compiles on first use and returns the warm
+    ``CompiledCell`` afterwards; ``compiles``/``hits`` counters back the
+    zero-recompile assertion of the serving path."""
+
     def __init__(self, mesh):
         self.mesh = mesh
         self._cells: dict[CellKey, CompiledCell] = {}

@@ -22,12 +22,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.cache.tiers import tiered_hot_lookup_fn
 from repro.core.inference import packed_lookup_fn
 from repro.dist.sharding import (lm_kv_cache_pspecs, lm_param_pspecs,
-                                 packed_serve_pspecs, replicate_like)
+                                 packed_serve_pspecs, replicate_like,
+                                 tiered_hot_pspecs)
 
 
 class ServeCellDef(NamedTuple):
+    """One compilable serving cell: a step function plus everything the
+    ``CellCache`` needs to AOT-compile it — *bound* inputs (params/state,
+    device_put once at registration) with their pspecs, *request* input
+    ShapeDtypeStructs with theirs, output pspecs, and the identity fields
+    (``arch``/``shape``/``kind``/``batch``) that key the compile cache."""
     arch: str              # architecture identity (cache-key component)
     shape: str             # shape name, e.g. "serve_p99"
     kind: str              # score | lookup | retrieve | decode
@@ -119,6 +126,57 @@ def packed_lookup_cell(table, meta, offsets, *, batch: int, n_fields: int,
         out_pspecs=P(dp, None, None),
         meta={"kind": "lookup", "batch": batch, "n_fields": n_fields},
         static=(meta["bits"], meta["d"], meta["n"]),
+    )
+
+
+def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
+                      batch: int, arch: str, shape: str, dp=("data",),
+                      rows_axes=("model",),
+                      row_keys=("wide", "fm_linear")) -> ServeCellDef:
+    """Batched CTR scoring from a **tiered** table: ``(ids (B, F), cold_fill
+    (B, F, d)) -> logits (B,)``.
+
+    Hot rows are gathered device-locally inside the cell from the bound hot
+    tier (row-sharded like the monolithic table, ``tiered_hot_pspecs``);
+    the cold rows arrive as a per-request dense fill staged by the engine's
+    prefetch (``TieredTableStore.prefetch_cold`` → ``cold_part``), so their
+    host→device transfer overlaps the previous chunk's compute. The merge is
+    a ``jnp.where`` on the tier mask and the interaction net is the model's
+    own ``interact`` — the scores match the monolithic score cell.
+
+    ``params`` is the serving param tree *without* the ``"embedding"`` entry
+    (the tiered store owns the table); ``hot`` is ``TieredTableStore.hot``.
+    """
+    n_fields = len(cfg.fields)
+    d = int(meta["d"])
+    hot_lookup = tiered_hot_lookup_fn(meta["bits"], d)
+
+    def tiered_step(p, st, bufs, hot_tree, ids, cold_fill):
+        gids = ids + bufs["offsets"][None, :]
+        hot_emb = hot_lookup(hot_tree, gids)                    # 0 at cold
+        is_hot = jnp.take(hot_tree["is_hot"], gids, axis=0)
+        emb = jnp.where(is_hot[..., None], hot_emb, cold_fill)
+        logits, _ = model.interact(p, st, emb, gids, cfg, train=False)
+        return logits
+
+    param_pspecs = {k: replicate_like(v) for k, v in params.items()}
+    for k in row_keys:
+        if k in params:
+            param_pspecs[k] = P(rows_axes)
+
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="tiered_score", batch=batch,
+        step_fn=tiered_step,
+        bound=(params, state, buffers, hot),
+        bound_pspecs=(param_pspecs, replicate_like(state),
+                      replicate_like(buffers),
+                      tiered_hot_pspecs(hot, rows_axes=rows_axes)),
+        request_specs=(_sds((batch, n_fields), jnp.int32),
+                       _sds((batch, n_fields, d), jnp.float32)),
+        request_pspecs=(P(dp, None), P(dp, None, None)),
+        out_pspecs=P(dp),
+        meta={"kind": "tiered_score", "batch": batch, "n_fields": n_fields},
+        static=(cfg, tuple(meta["bits"]), d),
     )
 
 

@@ -26,15 +26,27 @@ from repro.dist.mesh import host_mesh
 from repro.serve.batcher import RequestBatcher
 from repro.serve.cache import CellCache, CompiledCell
 from repro.serve.cells import (ServeCellDef, packed_lookup_cell,
-                               packed_score_cell)
+                               packed_score_cell, tiered_score_cell)
 from repro.serve.stats import LatencyStats
 
 
 class RegisteredCell(NamedTuple):
+    """A cell after registration: its definition, the warm compiled
+    executable, the bound inputs committed to their shardings, and the
+    optional Figure-5 lookup-split companion cell."""
     celldef: ServeCellDef
     cell: CompiledCell        # the warm executable
     bound: tuple              # bound inputs, committed to their shardings
     lookup: "RegisteredCell | None"   # Figure-5 split companion
+
+
+class TieredCell(NamedTuple):
+    """A tiered score cell plus the ``TieredTableStore`` that feeds it and
+    the per-field id offsets used to globalize request ids for the cold
+    prefetch (the cell itself re-globalizes on device)."""
+    reg: RegisteredCell
+    store: object             # repro.cache.TieredTableStore
+    offsets: np.ndarray       # (F,) int32
 
 
 def _sigmoid(x: np.ndarray) -> np.ndarray:
@@ -57,6 +69,8 @@ class Engine:
         self._score_batcher = RequestBatcher()
         self._retrieve: dict[str, RegisteredCell] = {}  # arch -> cell
         self._decode: dict[str, RegisteredCell] = {}    # arch -> cell
+        self._tiered: dict[str, TieredCell] = {}        # bucket name -> cell
+        self._tiered_batcher = RequestBatcher()
 
     # -- registration -------------------------------------------------------
 
@@ -120,6 +134,26 @@ class Engine:
                                         rows_axes=rows_axes)
             self.register(cd, lookup_cell=lc)
 
+    def register_tiered_model(self, arch, model, cfg, params, state, buffers,
+                              store, *, shapes: dict[str, int], dp=("data",),
+                              rows_axes=("model",)):
+        """Register one **tiered** score cell per (shape name → row capacity)
+        serving from a ``repro.cache.TieredTableStore``: the store's hot tier
+        binds into the executable (device-local gather), cold rows ride each
+        request as prefetch-staged fills (see ``score_tiered``).
+
+        ``params`` may carry an ``"embedding"`` entry (the monolithic packed
+        table) — it is dropped; the store owns the table now."""
+        p = {k: v for k, v in params.items() if k != "embedding"}
+        offsets = np.asarray(buffers["offsets"], np.int32)
+        for shape, rows in shapes.items():
+            cd = tiered_score_cell(model, cfg, p, state, buffers, store.hot,
+                                   store.meta, batch=rows, arch=arch,
+                                   shape=shape, dp=dp, rows_axes=rows_axes)
+            reg = self._compile(cd)
+            self._tiered[shape] = TieredCell(reg, store, offsets)
+            self._tiered_batcher.register(shape, rows)
+
     # -- request paths ------------------------------------------------------
 
     def _timed_call(self, reg: RegisteredCell, *request):
@@ -145,6 +179,57 @@ class Engine:
             out[chunk.start:chunk.start + chunk.n_valid] = \
                 np.asarray(y)[:chunk.n_valid]
         return out if return_logits else _sigmoid(out)
+
+    def score_tiered(self, ids, *, overlap: bool = True,
+                     return_logits: bool = False) -> np.ndarray:
+        """Score an (n, F) id batch through the tiered hot/cold store.
+
+        Hot rows are gathered device-locally inside the compiled cell; each
+        chunk's cold-row fill (packed words, host-gathered) is
+        ``device_put`` **one chunk ahead** while the previous chunk's cell is
+        still computing, so the cold transfer hides under compute.
+        ``overlap=False`` stages each fill synchronously right before its
+        dispatch — the reference timing in ``BENCH_prefetch.json``. Results
+        are identical either way (the pipeline only moves bytes earlier)."""
+        ids = np.asarray(ids, np.int32)
+        out = np.empty((ids.shape[0],), np.float32)
+        chunks = list(self._tiered_batcher.split(ids))
+
+        def stage(k):
+            chunk, padded, mask = chunks[k]
+            tc = self._tiered[chunk.bucket]
+            # mask out batcher padding: pad rows fetch no cold bytes and
+            # stay out of the hit/byte counters (their outputs are dropped
+            # at unpad, so a zero fill is as good as a real one)
+            fill = tc.store.prefetch_cold(padded + tc.offsets[None, :],
+                                          valid=mask)
+            x = jax.device_put(jnp.asarray(padded),
+                               tc.reg.cell.in_shardings[len(tc.reg.bound)])
+            return tc, x, fill
+
+        staged = stage(0) if overlap else None
+        for k, (chunk, _padded, _mask) in enumerate(chunks):
+            tc, x, fill = staged if overlap else stage(k)
+            t0 = time.perf_counter()
+            cold = tc.store.cold_part(fill).reshape(
+                x.shape[0], x.shape[1], -1)                    # (B, F, d)
+            cold = jax.device_put(
+                cold, tc.reg.cell.in_shardings[len(tc.reg.bound) + 1])
+            y = tc.reg.cell.compiled(*tc.reg.bound, x, cold)   # async dispatch
+            if overlap and k + 1 < len(chunks):
+                staged = stage(k + 1)   # host gather + H2D under y's compute
+            jax.block_until_ready(y)
+            self.stats.record(tc.reg.celldef.name,
+                              (time.perf_counter() - t0) * 1e3)
+            out[chunk.start:chunk.start + chunk.n_valid] = \
+                np.asarray(y)[:chunk.n_valid]
+        return out if return_logits else _sigmoid(out)
+
+    def tier_counters(self) -> dict:
+        """Per-bucket ``TieredTableStore.counters()`` (stores may be shared
+        across buckets, in which case the numbers repeat)."""
+        return {name: tc.store.counters()
+                for name, tc in sorted(self._tiered.items())}
 
     def retrieve(self, user_ids, cand_ids, *, arch: str | None = None):
         """Top-k retrieval of one user against an arbitrary-size candidate

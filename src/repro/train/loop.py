@@ -94,7 +94,16 @@ class Trainer:
 
     # -- main loop ------------------------------------------------------------
     def run(self, data_fn: Callable, n_steps: int, *, log_every: int = 100,
-            log_fn=print) -> dict:
+            log_fn=print, prefetch=False) -> dict:
+        """Run up to ``n_steps``. ``prefetch`` stages each batch on device one
+        step ahead of compute (``repro.cache.PrefetchPipeline`` — pass True
+        for a default pipeline or a pre-built one), overlapping the
+        host→device copy with the in-flight step's compute. Same bytes, same
+        order: losses are step-identical to the synchronous loop."""
+        if prefetch:
+            from repro.cache.prefetch import PrefetchPipeline
+            data_fn = (prefetch if isinstance(prefetch, PrefetchPipeline)
+                       else PrefetchPipeline(data_fn))
         t0 = time.time()
         last = {}
         while self.step < n_steps:

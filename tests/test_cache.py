@@ -1,0 +1,196 @@
+"""Tiered hot/cold store + async prefetch (repro.cache).
+
+Covers the ISSUE-3 acceptance criteria: tiered lookups bit-exact against the
+monolithic packed table across hot fractions {0, 0.1, 1.0}, the prefetch
+train loop step-identical to the synchronous loop, hit counters matching a
+hand-computed trace, and the engine's tiered score path agreeing with the
+monolithic score cells.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import PrefetchPipeline, TieredTableStore
+from repro.core.inference import build_packed_table, packed_lookup
+from repro.core.mpe import MPEConfig
+from repro.core.packing import row_bytes
+from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.embeddings.frequency import hot_feature_mask, zipf_frequencies
+from repro.embeddings.table import FieldSpec
+from repro.models.dlrm import DLRMConfig
+from repro.train.loop import Trainer
+from repro.train.optimizer import adam
+from repro.zoo import dlrm_builder
+
+
+def _random_packed_table(n=160, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = MPEConfig()
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    fbits = rng.integers(0, len(cfg.bits), size=n).astype(np.int32)
+    alpha = (np.abs(rng.normal(size=len(cfg.bits))) * 0.1 + 0.01).astype(np.float32)
+    beta = (rng.normal(size=d) * 0.01).astype(np.float32)
+    table, meta = build_packed_table(emb, fbits, alpha, beta, cfg)
+    return table, meta
+
+
+@pytest.mark.parametrize("hot_fraction", [0.0, 0.1, 1.0])
+def test_tiered_lookup_bit_exact(hot_fraction):
+    table, meta = _random_packed_table()
+    freqs = zipf_frequencies(meta["n"], seed=1)
+    store = TieredTableStore(table, meta, freqs, hot_fraction)
+    rng = np.random.default_rng(2)
+    ids = rng.integers(0, meta["n"], size=(41, 3)).astype(np.int32)
+    ref = np.asarray(packed_lookup(table, meta, jnp.asarray(ids)))
+    got = np.asarray(store.lookup(ids))
+    assert got.shape == ref.shape
+    assert np.array_equal(got, ref)
+    # prefetch-handle path is the same bytes, staged earlier
+    fill = store.prefetch_cold(ids)
+    assert np.array_equal(np.asarray(store.lookup(ids, fill)), ref)
+
+
+def test_hot_feature_mask_deterministic_topk():
+    freqs = np.array([5.0, 1.0, 9.0, 9.0, 2.0])
+    mask = hot_feature_mask(freqs, 0.4)  # ceil(0.4*5) = 2 hottest
+    assert mask.tolist() == [False, False, True, True, False]
+    assert hot_feature_mask(freqs, 0.0).sum() == 0
+    assert hot_feature_mask(freqs, 1.0).all()
+
+
+def test_hit_counters_match_hand_trace():
+    # 4 features, all at one non-zero width; freqs make features {0, 1} hot
+    cfg = MPEConfig(bits=(0, 8))
+    n, d = 4, 4
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    fbits = np.full((n,), 1, np.int32)      # every feature at 8 bits
+    alpha = np.array([0.0, 0.05], np.float32)
+    beta = np.zeros((d,), np.float32)
+    table, meta = build_packed_table(emb, fbits, alpha, beta, cfg)
+    store = TieredTableStore(table, meta, [40, 30, 2, 1], 0.5)
+
+    ids = np.array([[0, 2], [1, 3], [0, 0]], np.int32)   # 3 hot+hot/cold mix rows
+    store.lookup(ids)
+    c = store.counters()
+    # hand trace: flat ids = 0,2,1,3,0,0 -> hot: 0,1,0,0 (4), cold: 2,3 (2)
+    assert c["hot_lookups"] == 4
+    assert c["cold_lookups"] == 2
+    assert c["bytes_moved"] == 2 * row_bytes(d, 8)
+    assert c["hit_rate"] == pytest.approx(4 / 6)
+    assert c["hot_bytes"] == 2 * row_bytes(d, 8)
+    assert c["cold_bytes"] == 2 * row_bytes(d, 8)
+
+    store.reset_counters()
+    store.lookup(np.array([2, 3], np.int32))             # all cold
+    assert store.counters()["hot_lookups"] == 0
+    assert store.counters()["bytes_moved"] == 2 * row_bytes(d, 8)
+
+    # batcher padding (valid mask) fetches nothing and skips the counters
+    store.reset_counters()
+    padded = np.array([[2, 3], [0, 0], [0, 0]], np.int32)
+    fill = store.prefetch_cold(padded, valid=np.array([True, False, False]))
+    assert fill.bytes_moved == 2 * row_bytes(d, 8)       # row 0 only
+    c = store.counters()
+    assert c["hot_lookups"] == 0 and c["cold_lookups"] == 2
+
+
+def _tiny_setup(seed=0):
+    spec = CTRSpec(field_vocabs=(300, 200), batch_size=128, seed=seed)
+    ds = SyntheticCTR(spec)
+    fields = tuple(FieldSpec(f"f{i}", v) for i, v in enumerate(spec.field_vocabs))
+    base = DLRMConfig(fields=fields, d_embed=8, mlp_hidden=(16,), backbone="dnn")
+    return ds, dlrm_builder(base, ds.expected_frequencies())
+
+
+def test_prefetch_loop_step_identical():
+    """The prefetch pipeline changes when bytes move, never the training
+    trajectory: per-step losses and final params match the synchronous loop
+    bit for bit."""
+    runs = {}
+    for prefetch in (False, True):
+        ds, build = _tiny_setup()
+        b = build(jax.random.PRNGKey(0), "plain", {})
+        tr = Trainer(b["loss_fn"], b["params"], b["buffers"], b["state"],
+                     adam(1e-3))
+        losses = []
+        tr.run(lambda s: ds.batch(s), 10, log_every=1,
+               log_fn=lambda m: losses.append(m.split(" gnorm")[0]),
+               prefetch=prefetch)
+        runs[prefetch] = (losses, jax.tree.map(np.asarray, tr.params))
+    assert runs[False][0] == runs[True][0]          # per-step loss lines
+    for a, b in zip(jax.tree.leaves(runs[False][1]),
+                    jax.tree.leaves(runs[True][1])):
+        assert np.array_equal(a, b)
+
+
+def test_prefetch_pipeline_stages_ahead_and_restarts():
+    seen = []
+
+    def data_fn(step):
+        seen.append(step)
+        return {"x": np.full((2,), step, np.int32)}
+
+    pipe = PrefetchPipeline(data_fn, depth=2)
+    b0 = pipe(0)
+    assert np.asarray(b0["x"])[0] == 0
+    assert seen == [0, 1, 2]                        # staged two ahead
+    b1 = pipe(1)
+    assert np.asarray(b1["x"])[0] == 1
+    assert seen == [0, 1, 2, 3]                     # reused the staged batch
+    # checkpoint-restore style jump: stale read-ahead is dropped, not served
+    b7 = pipe(7)
+    assert np.asarray(b7["x"])[0] == 7
+    assert pipe(8) is not None and 8 in seen
+
+
+def test_prefetch_pipeline_cold_fills_bounded():
+    """Staged cold fills must not accumulate across steps (device-memory
+    leak): unconsumed fills for past steps are evicted on the next call."""
+    class FakeStore:
+        def prefetch_cold(self, ids, valid=None):
+            return ("fill", int(np.asarray(ids)[0, 0]))
+
+    pipe = PrefetchPipeline(lambda s: {"ids": np.full((2, 2), s, np.int32)},
+                            store=FakeStore())
+    for step in range(25):
+        pipe(step)                         # never calls take_cold
+        assert len(pipe._cold) <= pipe.depth + 1
+    assert pipe.take_cold(25) == ("fill", 25)   # current read-ahead usable
+    assert pipe.take_cold(0) is None            # long gone
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.launch.serve import build_engine, train_packed_dlrm
+    cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=(150, 100, 120), train_steps=10, train_batch=128,
+        d_embed=8, mlp_hidden=(16,), seed=4)
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                             freqs, 0.3)
+    engine = build_engine(cfg, params, state, buffers, p99_rows=64,
+                          bulk_rows=256, store=store)
+    ids = SyntheticCTR(spec._replace(batch_size=300)).batch(50_000)["ids"]
+    return engine, store, ids
+
+
+def test_engine_tiered_matches_monolithic(served):
+    engine, store, ids = served
+    mono = engine.score(ids)
+    tiered = engine.score_tiered(ids)
+    assert np.allclose(mono, tiered, atol=1e-6)
+
+
+def test_engine_tiered_overlap_invariant_and_warm(served):
+    engine, store, ids = served
+    a = engine.score_tiered(ids, overlap=True)
+    b = engine.score_tiered(ids, overlap=False)
+    assert np.array_equal(a, b)                     # overlap only moves bytes
+    n_compiles = engine.compile_count
+    engine.score_tiered(ids)
+    assert engine.compile_count == n_compiles       # zero recompiles when warm
+    c = engine.tier_counters()
+    assert c and all(v["hot_lookups"] + v["cold_lookups"] > 0
+                     for v in c.values())
