@@ -51,6 +51,18 @@ def model_flops(cell: dict) -> float | None:
     return None  # recsys/gnn cells are gather/scatter bound; flops ≠ utility
 
 
+def collective_breakdown(coll: dict) -> dict:
+    """{kind: {"bytes", "count"}} — the per-collective byte counts, without
+    the scalar ``total_bytes`` entry."""
+    return {k: v for k, v in coll.items() if isinstance(v, dict)}
+
+
+def format_collectives(coll: dict) -> str:
+    parts = [f"{k}={v['bytes']:.3e}B x{v['count']}"
+             for k, v in sorted(collective_breakdown(coll).items())]
+    return " ".join(parts) if parts else "none"
+
+
 def analyze_cell(cell: dict) -> dict:
     chips = cell["n_chips"]
     t_compute = cell["flops_per_device"] / PEAK_FLOPS_BF16
@@ -67,6 +79,7 @@ def analyze_cell(cell: dict) -> dict:
         "t_compute_s": t_compute, "t_memory_s": t_memory,
         "t_collective_s": t_coll, "dominant": dominant,
         "model_flops": mf,
+        "collectives": collective_breakdown(cell["collectives_per_device"]),
     }
     if mf:
         out["usefulness"] = mf / (chips * cell["flops_per_device"] + 1e-30)
@@ -75,10 +88,41 @@ def analyze_cell(cell: dict) -> dict:
     return out
 
 
+def shard_bench_rows(path: str) -> list:
+    """Per-collective byte counts of the shard_map'd cells from a
+    ``BENCH_shard.json`` artifact (benchmarks/shard_bench.py) — the sharded
+    lookup/serve/train counterpart of the dry-run cells."""
+    with open(path) as f:
+        bench = json.load(f)
+    rows = []
+    for mesh_name, kernels in bench.get("kernels", {}).items():
+        for kname, rec in kernels.items():
+            if "collectives" in rec:
+                rows.append({"cell": f"shard/{kname}", "mesh": mesh_name,
+                             "p50_ms": rec.get("p50_ms"),
+                             "collectives": collective_breakdown(
+                                 rec["collectives"])})
+    for mesh_name, rec in bench.get("train", {}).items():
+        if "collectives" in rec:
+            rows.append({"cell": "shard/train_step", "mesh": mesh_name,
+                         "p50_ms": rec.get("ms_per_step"),
+                         "collectives": collective_breakdown(
+                             rec["collectives"])})
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="benchmarks/artifacts")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--collectives", action="store_true",
+                    help="also print the per-collective byte breakdown "
+                         "(all-reduce / all-gather / reduce-scatter / "
+                         "all-to-all / collective-permute) per cell")
+    ap.add_argument("--shard-bench", default=None,
+                    help="a BENCH_shard.json (benchmarks/shard_bench.py): "
+                         "report the measured shard_map cells' per-collective "
+                         "bytes alongside the dry-run projections")
     args = ap.parse_args()
     rows = []
     for path in sorted(glob.glob(os.path.join(args.dir, "dryrun_*.json"))):
@@ -97,6 +141,17 @@ def main():
             if "usefulness" in r else "-"
         print(f"{r['cell']:58s} {r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
               f"{r['t_collective_s']:11.4f} {r['dominant']:>10s} {rf:>9s} {uf:>8s}")
+        if args.collectives and r["collectives"]:
+            print(f"{'':4s}collectives: {format_collectives(r['collectives'])}")
+    if args.shard_bench:
+        srows = shard_bench_rows(args.shard_bench)
+        print(f"\nshard_map cells ({args.shard_bench}) — measured "
+              f"per-collective bytes/device:")
+        for r in srows:
+            ms = f"{r['p50_ms']:.3f}ms" if r.get("p50_ms") is not None else "-"
+            print(f"  {r['cell']:24s} {r['mesh']:>6s} {ms:>10s}  "
+                  f"{format_collectives(r['collectives'])}")
+        rows += srows
     return rows
 
 

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Diff fresh BENCH_*.json smoke numbers against the checked-in baselines.
+
+The bench-smoke CI job runs the smoke benchmarks, then this script compares
+every numeric metric against ``benchmarks/baselines/BENCH_*.json`` and writes
+a markdown delta table to ``$GITHUB_STEP_SUMMARY`` (and stdout). The job
+stays ``continue-on-error`` — shared-runner noise must not veto a correct
+change — but regressions become *visible* in the PR summary instead of
+silently shipping.
+
+Comparable metrics are the flattened numeric leaves of each artifact, minus
+environment-dependent keys (timestamps, one-off setup costs, env/config
+records). Latency-ish keys (``*_ms``, ``p50``/``p99``, ``ms_per_step``) get
+a ⚠ marker above +20% — advisory only on shared runners.
+
+    python scripts/bench_compare.py --fresh . --baseline benchmarks/baselines
+Exit code is always 0: visibility, not a gate.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+SKIP = re.compile(r"(^|\.)(unix_time|train_s|register_s|compile|compiles|"
+                  r"env|config)(\.|$)")
+LATENCY = re.compile(r"(_ms|p50|p99|ms_per_step)($|\.)")
+WARN_PCT = 20.0
+
+
+def flatten(node, prefix="") -> dict:
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix[:-1]] = float(node)
+    return out
+
+
+def compare(fresh: dict, base: dict) -> list[tuple]:
+    f, b = flatten(fresh), flatten(base)
+    rows = []
+    for key in sorted(set(f) & set(b)):
+        if SKIP.search(key):
+            continue
+        new, old = f[key], b[key]
+        if old == 0:
+            delta = 0.0 if new == 0 else float("inf")
+        else:
+            delta = (new - old) / abs(old) * 100.0
+        rows.append((key, old, new, delta))
+    return rows
+
+
+def fmt_val(x: float) -> str:
+    return f"{x:.4g}"
+
+
+def render(name: str, rows: list[tuple], top: int = 12) -> str:
+    lines = [f"### {name}", "",
+             "| metric | baseline | fresh | Δ% | |",
+             "|---|---:|---:|---:|---|"]
+    ranked = sorted(rows, key=lambda r: -abs(r[3]))[:top]
+    for key, old, new, delta in ranked:
+        warn = "⚠" if (LATENCY.search(key) and delta > WARN_PCT) else ""
+        d = "inf" if delta == float("inf") else f"{delta:+.1f}"
+        lines.append(f"| `{key}` | {fmt_val(old)} | {fmt_val(new)} | {d} | "
+                     f"{warn} |")
+    n_more = len(rows) - len(ranked)
+    if n_more > 0:
+        lines.append(f"\n({n_more} more metrics within smaller deltas)")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    args = ap.parse_args(argv)
+
+    sections = []
+    fresh_files = sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))
+    if not fresh_files:
+        sections.append("## Bench compare\n\nno fresh BENCH_*.json found — "
+                        "benchmarks did not run.\n")
+    for path in fresh_files:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(base_path):
+            sections.append(f"### {name}\n\nno checked-in baseline "
+                            f"(`{args.baseline}/{name}`) — add one to start "
+                            "the trajectory.\n")
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        rows = compare(fresh, base)
+        sections.append(render(name, rows))
+
+    report = "## Bench compare (smoke vs checked-in baselines)\n\n" + \
+        "\n".join(sections) + \
+        "\nShared-runner numbers are noisy; deltas are advisory " \
+        "(the job stays non-blocking).\n"
+    print(report)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(report)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

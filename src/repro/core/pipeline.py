@@ -39,7 +39,8 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
                      mpe_cfg: MPEConfig, optimizer, search_steps: int,
                      retrain_steps: int, retrain_mode: str = "mpe",
                      eval_fn: Callable | None = None, log_fn=print,
-                     ckpt_dir: str | None = None, prefetch: bool = False) -> dict:
+                     ckpt_dir: str | None = None, prefetch: bool = False,
+                     mesh=None) -> dict:
     comp_cfg = mpe_cfg._asdict()
 
     # ---------------- phase 1: precision search ----------------
@@ -47,7 +48,7 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
     params0 = jax.tree.map(lambda x: x, bundle["params"])  # shallow copy of refs
     init_snapshot = jax.tree.map(np.asarray, params0)      # host copy of init
     trainer = Trainer(bundle["loss_fn"], bundle["params"], bundle["buffers"],
-                      bundle["state"], optimizer,
+                      bundle["state"], optimizer, mesh=mesh,
                       ckpt_dir=None if ckpt_dir is None else f"{ckpt_dir}/search")
     trainer.restore()
     log_fn(f"[mpe] search phase: {search_steps} steps")
@@ -99,6 +100,7 @@ def run_mpe_pipeline(build: Callable, data_fn: Callable, *, key,
     retrain_params = jax.tree.map(jnp_array, retrain_params)
     trainer2 = Trainer(rb["loss_fn"], retrain_params, retrain_buffers,
                        jax.tree.map(jnp_array, search_state), optimizer,
+                       mesh=mesh,
                        ckpt_dir=None if ckpt_dir is None else f"{ckpt_dir}/retrain")
     if steps:
         trainer2.restore()

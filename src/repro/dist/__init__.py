@@ -4,10 +4,18 @@
 ``repro.dist.sharding`` defines the partition-spec contract for every
 workload family in-tree (LM params/caches, recsys embedding tables, MPE
 packed serving tables) plus the in-model constraint helpers
-(``maybe_shard``/``shard_batch_dim``) that degrade to no-ops on one device.
+(``maybe_shard``/``shard_batch_dim``) that degrade to no-ops on one device;
+``repro.dist.shard`` places the fused Pallas kernels and the serve/train
+cells *inside* the partitioner with ``shard_map`` wrappers whose in/out
+specs derive from the same pspec contract.
 """
 from repro.dist.mesh import (current_mesh, host_mesh, make_device_mesh,
-                             use_mesh)
+                             parse_mesh_flag, use_mesh)
+from repro.dist.shard import (sharded_embedding_bag, sharded_flash_attention,
+                              sharded_mixed_expectation,
+                              sharded_packed_lookup,
+                              sharded_tiered_hot_lookup,
+                              sharded_value_and_grad)
 from repro.dist.sharding import (cell_shardings, current_dp_axes, dp_axes,
                                  lm_batch_pspecs, lm_cache_pspecs,
                                  lm_kv_cache_pspecs, lm_param_pspecs,
@@ -18,9 +26,13 @@ from repro.dist.sharding import (cell_shardings, current_dp_axes, dp_axes,
 
 __all__ = [
     "use_mesh", "current_mesh", "make_device_mesh", "host_mesh",
+    "parse_mesh_flag",
     "dp_axes", "current_dp_axes", "maybe_shard", "shard_batch_dim",
     "tree_named_shardings", "replicate_like", "cell_shardings",
     "lm_batch_pspecs", "lm_cache_pspecs", "lm_kv_cache_pspecs",
     "lm_param_pspecs", "recsys_table_pspecs", "packed_table_pspecs",
     "packed_serve_pspecs", "tiered_hot_pspecs",
+    "sharded_packed_lookup", "sharded_tiered_hot_lookup",
+    "sharded_embedding_bag", "sharded_flash_attention",
+    "sharded_mixed_expectation", "sharded_value_and_grad",
 ]

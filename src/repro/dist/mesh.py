@@ -59,6 +59,31 @@ def make_device_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mes
         return Mesh(mesh_utils.create_device_mesh(shape), axis_names)
 
 
+def parse_mesh_flag(flag: str | None) -> Mesh | None:
+    """``--mesh dp,mp`` CLI flag → a ("data", "model") host mesh, or None.
+
+    ``"2,2"`` builds a 2×2 mesh over the visible devices (fails loudly when
+    fewer than dp·mp are visible — virtualize CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``"auto"``
+    spreads every visible device on the data axis; None/"" disables.
+    """
+    if not flag:
+        return None
+    if flag == "auto":
+        return host_mesh()
+    try:
+        n_data, n_model = (int(x) for x in flag.split(","))
+    except ValueError as e:
+        raise SystemExit(f"--mesh expects 'dp,mp' or 'auto', got {flag!r}") from e
+    n_dev = len(jax.devices())
+    if n_data * n_model > n_dev:
+        raise SystemExit(
+            f"--mesh {flag}: needs {n_data * n_model} devices, "
+            f"{n_dev} visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_data * n_model})")
+    return host_mesh(n_data=n_data, n_model=n_model)
+
+
 def host_mesh(n_data: int | None = None, n_model: int = 1) -> Mesh:
     """("data", "model") mesh over host devices — the test-time mesh.
 

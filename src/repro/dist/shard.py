@@ -1,0 +1,507 @@
+"""shard_map layer: run the fused kernels and cells *inside* the partitioner.
+
+``pjit`` slices a computation after the fact; ``shard_map`` places it — each
+device runs the body on its local block and every cross-device byte is an
+explicit collective. This module is the bridge between the Pallas kernels
+(written against local arrays) and the ``("data", "model")`` mesh contract of
+``repro.dist.sharding``: every wrapper derives its in/out specs from the
+pspec families (``packed_table_pspecs``, ``tiered_hot_pspecs``,
+``recsys_table_pspecs``) and degrades to the single-device path when no
+multi-device mesh is active, so the same call site serves 1-CPU tests and a
+real mesh.
+
+Placement per wrapper:
+
+  ``sharded_packed_lookup``    subtables row-sharded over ``rows_axes``
+                               ("model"), ids batch-sharded over the data
+                               axes; device-local gather+unpack+dequant with
+                               an ownership mask, then ONE ``psum`` over the
+                               row axes merges the buckets. Each id owns
+                               exactly one (bucket, row), so the psum adds
+                               one non-zero term to zeros — bit-exact against
+                               the jitted single-device reference. (A
+                               capacity-bucketed all-to-all id shuffle would
+                               move ~32/b× fewer bytes but drops ids on
+                               overflow; the masked psum is capacity-free.)
+  ``sharded_tiered_hot_lookup``  same layout for the hot tier of a
+                               ``repro.cache.TieredTableStore`` (zeros at
+                               cold positions, merged by the caller).
+  ``sharded_embedding_bag``    table rows over ``rows_axes``, bags over the
+                               data axes; per-device partial bag sums +
+                               psum. NOT bit-exact for >1 row shard (the
+                               psum reassociates the bag sum) — documented
+                               tolerance ~1e-6 relative.
+  ``sharded_flash_attention``  batch over the data axes, heads over
+                               "model"; no collectives, bit-exact.
+  ``sharded_mixed_expectation`` rows over every mesh axis (row-parallel
+                               QAT); no collectives, bit-exact.
+  ``sharded_value_and_grad``   the train step's grad: batch data-parallel
+                               over the mesh, embedding-table leaves stored
+                               row-sharded over ``rows_axes`` (specs from
+                               ``recsys_table_pspecs``) and all-gathered in
+                               the body; autodiff transposes the gather into
+                               a psum-scatter, so table grads arrive
+                               row-shard-local while replicated MLP/side
+                               params get a ``pmean`` over the batch axes.
+
+Tables whose rows don't divide the row-axis size are padded up to the next
+multiple (``pad_rows_to_shard``) — pad rows carry zero words and are never
+owned by a real id, so they change no result (the pad-to-shard path).
+
+Call the wrappers from traced code (under ``jax.jit`` — the serve cells and
+the train step always are): eagerly-executed ``shard_map`` on jax 0.4.37
+reassembles replicated outputs incorrectly for some mesh shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+from repro.dist.mesh import current_mesh
+from repro.dist.sharding import replicate_like
+
+__all__ = [
+    "active_mesh", "pad_rows_to_shard", "rows_shard_index",
+    "sharded_packed_lookup", "sharded_tiered_hot_lookup",
+    "sharded_embedding_bag", "sharded_flash_attention",
+    "sharded_mixed_expectation", "sharded_value_and_grad",
+]
+
+
+# ---------------------------------------------------------------------------
+# mesh plumbing
+# ---------------------------------------------------------------------------
+
+def active_mesh(mesh=None):
+    """``mesh`` or the registry's current mesh — None when sharding is a
+    no-op (no mesh, or a 1-device mesh)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return None
+    return mesh
+
+
+def _present_axes(mesh, axes) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _axes_size(mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _dp_axes_of(mesh, rows_axes) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a not in rows_axes)
+
+
+def _batch_entry(mesh, dim: int, axes) -> tuple[str, ...] | None:
+    """The pspec entry for a batch dim: ``axes`` when they divide it, else
+    replicated (mirrors ``sharding._fit_spec``)."""
+    if axes and dim % _axes_size(mesh, axes) == 0:
+        return tuple(axes)
+    return None
+
+
+def pad_rows_to_shard(x, n_shards: int):
+    """Pad dim 0 up to a multiple of ``n_shards`` with zeros (the
+    pad-to-shard path for tables whose rows don't divide the row axes).
+    Zero packed words decode to the most-negative code, but pad rows are
+    never *owned* by a real id, so no result can read them.
+
+    Implemented with ``jnp.pad``, NOT ``jnp.concatenate``: on jax 0.4.37 the
+    SPMD partitioner mis-lowers an uneven concatenate that feeds a
+    ``shard_map`` row-sharded operand (wrong rows reach the shards on a 2×2
+    mesh — see tests/test_shard.py::test_packed_lookup_pad_to_shard_edge,
+    which fails with the concatenate formulation)."""
+    pad = (-x.shape[0]) % n_shards
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def rows_shard_index(mesh, rows_axes):
+    """Linear shard index of this device along ``rows_axes`` (row-major over
+    the axes tuple, matching ``PartitionSpec((a, b), ...)`` layout). Call
+    inside a ``shard_map`` body."""
+    idx = jnp.int32(0)
+    for a in rows_axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# packed-table lookup (repro.kernels.mpe_lookup / core.inference)
+# ---------------------------------------------------------------------------
+
+def _bucket_dequant(sub, loc, alpha_i, beta, *, b, d, use_kernel, interpret):
+    """Device-local gather+unpack+dequant of one width bucket — the fused
+    Pallas kernel or its jnp formulation, on local rows only."""
+    if use_kernel:
+        from repro.kernels.mpe_lookup.kernel import packed_lookup_pallas
+        return packed_lookup_pallas(loc, sub, alpha_i, beta, b=b, d=d,
+                                    interpret=interpret)
+    words = jnp.take(sub, loc, axis=0)
+    codes = packing.unpack_codes(words, b, d)
+    return alpha_i * codes.astype(jnp.float32) + beta
+
+
+def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
+                          mesh=None, use_kernel: bool = False,
+                          interpret: bool = True):
+    """``core.inference.packed_lookup`` under ``shard_map``: subtables
+    row-sharded over ``rows_axes`` (layout: ``packed_table_pspecs``), ids
+    batch-sharded over the remaining axes, one ``psum`` over the row axes.
+
+    Degrades to the single-device lookup when no multi-device mesh is active
+    (or none of ``rows_axes`` is on it). ``use_kernel`` runs the fused
+    Pallas kernel per bucket inside the body. Bit-exact against the jitted
+    single-device reference (see module docstring)."""
+    from repro.core.inference import packed_lookup
+
+    mesh = active_mesh(mesh)
+    if mesh is None:
+        if use_kernel:
+            from repro.kernels.mpe_lookup.ops import packed_lookup_kernel
+            return packed_lookup_kernel(table, meta, ids, interpret=interpret)
+        return packed_lookup(table, meta, ids)
+    rows_ax = _present_axes(mesh, rows_axes)
+    mp = _axes_size(mesh, rows_ax)
+
+    bits, d = meta["bits"], meta["d"]
+    dp = _dp_axes_of(mesh, rows_ax)
+    flat = ids.reshape(-1)
+    batch_ax = _batch_entry(mesh, flat.shape[0], dp)
+
+    tbl = dict(table, subtables={k: pad_rows_to_shard(v, mp)
+                                 for k, v in table["subtables"].items()})
+
+    def body(subs, local_idx, width_idx, alpha, beta, fl):
+        widx = jnp.take(width_idx, fl, axis=0)
+        lidx = jnp.take(local_idx, fl, axis=0)
+        base = rows_shard_index(mesh, rows_ax)
+        out = jnp.zeros((fl.shape[0], d), jnp.float32)
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue  # zero-width features contribute the zero vector
+            sub = subs[f"b{b}"]
+            rows_loc = sub.shape[0]
+            loc = lidx - base * rows_loc
+            own = (loc >= 0) & (loc < rows_loc)
+            deq = _bucket_dequant(sub, jnp.clip(loc, 0, rows_loc - 1),
+                                  alpha[i], beta, b=b, d=d,
+                                  use_kernel=use_kernel, interpret=interpret)
+            out = jnp.where((own & (widx == i))[:, None], deq, out)
+        # one non-zero owner per id: the psum adds zeros — exact
+        return jax.lax.psum(out, rows_ax) if rows_ax else out
+
+    in_specs = ({k: P(rows_ax or None, None) for k in tbl["subtables"]},
+                P(None), P(None), P(None), P(None), P(batch_ax))
+    out = shard_map(body, mesh, in_specs=in_specs,
+                    out_specs=P(batch_ax, None), check_rep=False)(
+        tbl["subtables"], tbl["local_idx"], tbl["width_idx"],
+        tbl["alpha"], tbl["beta"], flat)
+    return out.reshape(*ids.shape, d)
+
+
+def sharded_tiered_hot_lookup(hot, bits, d: int, ids, *,
+                              rows_axes=("model",), mesh=None):
+    """``repro.cache.tiers.tiered_hot_lookup`` under ``shard_map``: hot
+    subtables row-sharded per ``tiered_hot_pspecs``, zeros at cold positions
+    (the caller merges the cold fill). Bit-exact like the packed lookup —
+    the ownership mask additionally requires the hot bit."""
+    from repro.cache.tiers import tiered_hot_lookup
+
+    mesh = active_mesh(mesh)
+    if mesh is None:
+        return tiered_hot_lookup(hot, bits, d, ids)
+    rows_ax = _present_axes(mesh, rows_axes)
+    mp = _axes_size(mesh, rows_ax)
+
+    dp = _dp_axes_of(mesh, rows_ax)
+    flat = ids.reshape(-1)
+    batch_ax = _batch_entry(mesh, flat.shape[0], dp)
+    hot_p = dict(hot, subtables={k: pad_rows_to_shard(v, mp)
+                                 for k, v in hot["subtables"].items()})
+
+    def body(subs, tier_local, is_hot, width_idx, alpha, beta, fl):
+        widx = jnp.take(width_idx, fl, axis=0)
+        lidx = jnp.take(tier_local, fl, axis=0)
+        hot_bit = jnp.take(is_hot, fl, axis=0)
+        base = rows_shard_index(mesh, rows_ax)
+        out = jnp.zeros((fl.shape[0], d), jnp.float32)
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue
+            sub = subs[f"b{b}"]
+            rows_loc = sub.shape[0]
+            loc = lidx - base * rows_loc
+            own = (loc >= 0) & (loc < rows_loc) & hot_bit
+            words = jnp.take(sub, jnp.clip(loc, 0, rows_loc - 1), axis=0)
+            codes = packing.unpack_codes(words, b, d)
+            deq = alpha[i] * codes.astype(jnp.float32) + beta
+            out = jnp.where((own & (widx == i))[:, None], deq, out)
+        return jax.lax.psum(out, rows_ax) if rows_ax else out
+
+    in_specs = ({k: P(rows_ax or None, None) for k in hot_p["subtables"]},
+                P(None), P(None), P(None), P(None), P(None), P(batch_ax))
+    out = shard_map(body, mesh, in_specs=in_specs,
+                    out_specs=P(batch_ax, None), check_rep=False)(
+        hot_p["subtables"], hot_p["tier_local"], hot_p["is_hot"],
+        hot_p["width_idx"], hot_p["alpha"], hot_p["beta"], flat)
+    return out.reshape(*ids.shape, d)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag (repro.kernels.embedding_bag)
+# ---------------------------------------------------------------------------
+
+def sharded_embedding_bag(table, ids, mask, *, rows_axes=("model",),
+                          mesh=None, use_kernel: bool = True,
+                          interpret: bool = True):
+    """Multi-hot embedding bag under ``shard_map``: the (N, d) table
+    row-sharded over ``rows_axes`` (layout: ``recsys_table_pspecs``), bags
+    batch-sharded over the data axes; each device sums its owned slots with
+    the fused kernel, one ``psum`` merges the partial bags.
+
+    NOT bit-exact for >1 row shard: a bag whose slots land on different
+    shards has its sum reassociated by the psum (~1e-6 relative on fp32).
+    Exact when ``rows_axes`` resolve to a single shard (pure batch
+    sharding)."""
+    from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+    mesh = active_mesh(mesh)
+    rows_ax = _present_axes(mesh, rows_axes) if mesh is not None else ()
+    mp = _axes_size(mesh, rows_ax) if mesh is not None else 1
+    local = (embedding_bag_pallas if use_kernel else embedding_bag_ref)
+    kw = {"interpret": interpret} if use_kernel else {}
+    if mesh is None:
+        return local(table, ids, mask, **kw)
+
+    dp = _dp_axes_of(mesh, rows_ax)
+    batch_ax = _batch_entry(mesh, ids.shape[0], dp)
+    tab = pad_rows_to_shard(table, mp) if mp > 1 else table
+
+    def body(tab_loc, ids_b, mask_b):
+        rows_loc = tab_loc.shape[0]
+        base = rows_shard_index(mesh, rows_ax) * rows_loc
+        own = (ids_b >= base) & (ids_b < base + rows_loc)
+        loc = jnp.clip(ids_b - base, 0, rows_loc - 1)
+        part = local(tab_loc, loc, mask_b & own, **kw)
+        return jax.lax.psum(part, rows_ax) if mp > 1 else part
+
+    in_specs = (P(rows_ax if mp > 1 else None, None),
+                P(batch_ax, None), P(batch_ax, None))
+    return shard_map(body, mesh, in_specs=in_specs,
+                     out_specs=P(batch_ax, None), check_rep=False)(
+        tab, ids.astype(jnp.int32), mask.astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (repro.kernels.flash_attention)
+# ---------------------------------------------------------------------------
+
+def sharded_flash_attention(q, k, v, *, n_kv_heads: int | None = None,
+                            causal: bool = True, bq: int = 128, bk: int = 128,
+                            head_axes=("model",), mesh=None,
+                            interpret: bool = True):
+    """Flash attention under ``shard_map``: batch over the data axes, query
+    heads over ``head_axes`` — every (batch, head) pair computes wholly on
+    one device, so there are no collectives and the result is bit-exact
+    against the single-device kernel. GQA KV expansion happens *before* the
+    shard_map so the head sharding stays aligned."""
+    from repro.kernels.flash_attention.ops import flash_attention_kernel
+
+    del n_kv_heads  # derived from the shapes, as in the flat wrapper
+    mesh = active_mesh(mesh)
+    if mesh is None:
+        return flash_attention_kernel(q, k, v, causal=causal, bq=bq, bk=bk,
+                                      interpret=interpret)
+
+    hq, hkv = q.shape[2], k.shape[2]
+    if hkv != hq:  # GQA: expand KV to query heads before placing
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+
+    head_ax = _present_axes(mesh, head_axes)
+    dp = _dp_axes_of(mesh, head_ax)
+    batch_ax = _batch_entry(mesh, q.shape[0], dp)
+    head_entry = _batch_entry(mesh, hq, head_ax)
+
+    def body(qb, kb, vb):
+        return flash_attention_kernel(qb, kb, vb, causal=causal, bq=bq, bk=bk,
+                                      interpret=interpret)
+
+    spec = P(batch_ax, None, head_entry, None)
+    return shard_map(body, mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec, check_rep=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# QAT mixed expectation (repro.kernels.mpe_qat)
+# ---------------------------------------------------------------------------
+
+def sharded_mixed_expectation(rows, probs, alpha, beta, bits, *, mesh=None,
+                              interpret: bool = True):
+    """Eq. (9) expectation-over-widths under ``shard_map``: rows split over
+    *every* mesh axis (the op is row-parallel — the natural placement for
+    the gathered rows of a batch-sharded train step); α/β replicated. No
+    collectives, bit-exact. Rows pad up to the device count and unpad after
+    (the pad-to-shard path)."""
+    from repro.kernels.mpe_qat.ops import mixed_expectation_kernel
+
+    mesh = active_mesh(mesh)
+    if mesh is None:
+        return mixed_expectation_kernel(rows, probs, alpha, beta, bits,
+                                        interpret)
+
+    axes = tuple(mesh.axis_names)
+    n = rows.shape[0]
+    rows_p = pad_rows_to_shard(rows, mesh.size)
+    probs_p = pad_rows_to_shard(probs, mesh.size)
+
+    def body(r, p, a, b_):
+        return mixed_expectation_kernel(r, p, a, b_, bits, interpret)
+
+    out = shard_map(
+        body, mesh,
+        in_specs=(P(axes, None), P(axes, None), P(None), P(None)),
+        out_specs=P(axes, None), check_rep=False)(rows_p, probs_p, alpha, beta)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# train step: DP batch + row-sharded tables
+# ---------------------------------------------------------------------------
+
+def _table_pspecs(params, mesh, rows_axes):
+    """Param pspecs for the train step: ``recsys_table_pspecs`` for the
+    ``"embedding"`` entry (row axes only where the rows divide), everything
+    else replicated."""
+    from repro.dist.sharding import recsys_table_pspecs
+
+    pspecs = replicate_like(params)
+    emb = params.get("embedding") if isinstance(params, dict) else None
+    if not isinstance(emb, dict):
+        return pspecs
+    wanted = recsys_table_pspecs(tuple(rows_axes), emb)
+    fitted = {}
+    for k, v in emb.items():
+        spec = wanted[k]
+        entry = spec[0] if len(spec) else None
+        if entry and v.ndim >= 1 and v.shape[0] % _axes_size(mesh, rows_axes) == 0:
+            fitted[k] = spec
+        else:
+            fitted[k] = P(*([None] * v.ndim))
+    pspecs = dict(pspecs)
+    pspecs["embedding"] = fitted
+    return pspecs
+
+
+def _is_row_sharded(spec) -> bool:
+    return len(spec) > 0 and spec[0] is not None
+
+
+def sharded_value_and_grad(loss_fn, mesh, *, rows_axes=("model",)):
+    """A drop-in for ``jax.value_and_grad(loss_fn, has_aux=True)`` that runs
+    the loss+grad *inside* ``shard_map`` on ``mesh``.
+
+    Layout: the batch is data-parallel over every mesh axis that divides it
+    (falling back to the non-row axes, then to replicated); dense embedding
+    leaves (``params["embedding"]``, per ``recsys_table_pspecs``) are stored
+    row-sharded over ``rows_axes`` and all-gathered in the body, so autodiff
+    transposes the gather into a psum-scatter — table grads arrive
+    row-shard-local ("row-shard-local updates") while every replicated leaf
+    gets a ``pmean`` over the mesh ("gradient reduction for replicated MLP
+    params"). Loss and float aux leaves are ``pmean``-ed to replication;
+    integer/bool aux leaves must already be batch-independent.
+
+    Parity: mean-of-shard-means reassociates the batch reduction, so losses
+    and grads match the single-device step to fp32 tolerance (~1e-6), not
+    bit-exactly.
+
+    Returns ``vag(params, buffers, state, batch, *, step)`` →
+    ``((loss, aux), grads)``.
+    """
+    rows_ax = _present_axes(mesh, rows_axes)
+    mp = _axes_size(mesh, rows_ax)
+    other_axes = _dp_axes_of(mesh, rows_ax)
+    axes_all = tuple(mesh.axis_names)
+
+    def vag(params, buffers, state, batch, *, step):
+        leaves = jax.tree.leaves(batch)
+        bsz = leaves[0].shape[0] if leaves else 0
+        if bsz and bsz % mesh.size == 0:
+            batch_ax = axes_all
+        elif bsz and other_axes and bsz % _axes_size(mesh, other_axes) == 0:
+            batch_ax = other_axes
+        else:
+            batch_ax = ()
+        batch_specs = jax.tree.map(
+            lambda x: P(batch_ax or None, *([None] * (x.ndim - 1))), batch)
+        pspecs = _table_pspecs(params, mesh, rows_ax) if mp > 1 \
+            else replicate_like(params)
+
+        def gather_tables(p_sh):
+            return jax.tree_util.tree_map_with_path(
+                lambda path, x: _gather_leaf(pspecs, path, x), p_sh)
+
+        def _gather_leaf(specs, path, x):
+            spec = _leaf_spec(specs, path)
+            if _is_row_sharded(spec):
+                return jax.lax.all_gather(x, spec[0], axis=0, tiled=True)
+            return x
+
+        def inner(p_sh, bu, st, ba, stp):
+            def local(p_sh):
+                return loss_fn(gather_tables(p_sh), bu, st, ba, step=stp)
+
+            (loss, aux), grads = jax.value_and_grad(
+                local, has_aux=True)(p_sh)
+            loss = jax.lax.pmean(loss, axes_all)
+            aux = jax.tree.map(
+                lambda x: jax.lax.pmean(x, axes_all)
+                if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x,
+                aux)
+            grads = jax.tree_util.tree_map_with_path(
+                lambda path, g: _reduce_grad(path, g), grads)
+            return (loss, aux), grads
+
+        def _reduce_grad(path, g):
+            spec = _leaf_spec(pspecs, path)
+            if _is_row_sharded(spec):
+                # the all_gather transpose already psum-scattered over the
+                # row axes; average the rest and undo the row-axis sum/dup
+                g = jax.lax.pmean(g, other_axes) if other_axes else g
+                return g / mp
+            return jax.lax.pmean(g, axes_all)
+
+        aux_sds = jax.eval_shape(
+            lambda p, bu, st, ba: loss_fn(p, bu, st, ba, step=step)[1],
+            params, buffers, state, batch)
+        aux_specs = jax.tree.map(lambda s: P(*([None] * len(s.shape))),
+                                 aux_sds)
+        out_specs = ((P(), aux_specs), pspecs)
+        f = shard_map(inner, mesh,
+                      in_specs=(pspecs, replicate_like(buffers),
+                                replicate_like(state), batch_specs, P()),
+                      out_specs=out_specs, check_rep=False)
+        return f(params, buffers, state, batch, jnp.asarray(step))
+
+    return vag
+
+
+def _leaf_spec(specs, path):
+    """The PartitionSpec at ``path`` of a spec tree mirroring the params."""
+    node = specs
+    for entry in path:
+        if isinstance(node, P):
+            break
+        key = getattr(entry, "key", getattr(entry, "idx", None))
+        node = node[key]
+    return node

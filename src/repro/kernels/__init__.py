@@ -8,10 +8,16 @@ Each kernel package ships:
 Validated with interpret=True on CPU (the container has no TPU); BlockSpecs
 are chosen for v5e VMEM/VREG geometry — see DESIGN.md §6.
 """
-from repro.kernels.mpe_lookup.ops import packed_lookup_kernel
-from repro.kernels.mpe_qat.ops import mixed_expectation_kernel
-from repro.kernels.embedding_bag.ops import embedding_bag_kernel
-from repro.kernels.flash_attention.ops import flash_attention_kernel
+from repro.kernels.mpe_lookup.ops import (packed_lookup_kernel,
+                                           packed_lookup_kernel_sharded)
+from repro.kernels.mpe_qat.ops import (mixed_expectation_kernel,
+                                        mixed_expectation_kernel_sharded)
+from repro.kernels.embedding_bag.ops import (embedding_bag_kernel,
+                                             embedding_bag_kernel_sharded)
+from repro.kernels.flash_attention.ops import (flash_attention_kernel,
+                                               flash_attention_kernel_sharded)
 
 __all__ = ["packed_lookup_kernel", "mixed_expectation_kernel",
-           "embedding_bag_kernel", "flash_attention_kernel"]
+           "embedding_bag_kernel", "flash_attention_kernel",
+           "packed_lookup_kernel_sharded", "mixed_expectation_kernel_sharded",
+           "embedding_bag_kernel_sharded", "flash_attention_kernel_sharded"]

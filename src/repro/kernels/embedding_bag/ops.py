@@ -32,3 +32,15 @@ def _bwd(interpret, res, g):
 
 
 embedding_bag_kernel.defvjp(_fwd, _bwd)
+
+
+def embedding_bag_kernel_sharded(table, ids, mask, *, rows_axes=("model",),
+                                 mesh=None, interpret: bool = True):
+    """Forward-only bag under ``shard_map``: table rows over ``rows_axes``,
+    bags over the data axes, partial sums psum-merged. Tolerance ~1e-6 vs
+    the single-device kernel when the rows really split (the psum
+    reassociates the bag sum); falls back to the kernel when no multi-device
+    mesh is active (see ``repro.dist.shard``)."""
+    from repro.dist.shard import sharded_embedding_bag
+    return sharded_embedding_bag(table, ids, mask, rows_axes=rows_axes,
+                                 mesh=mesh, interpret=interpret)

@@ -53,3 +53,18 @@ def flash_attention_kernel(q, k, v, *, n_kv_heads: int | None = None,
     vf = jnp.moveaxis(v, 2, 1).reshape(b * hq, s, hd)
     of = _flash_flat(qf, kf, vf, causal, min(bq, s), min(bk, s), interpret)
     return jnp.moveaxis(of.reshape(b, hq, s, hd), 1, 2)
+
+
+def flash_attention_kernel_sharded(q, k, v, *, n_kv_heads: int | None = None,
+                                   causal: bool = True, bq: int = 128,
+                                   bk: int = 128, head_axes=("model",),
+                                   mesh=None, interpret: bool = True):
+    """Flash attention under ``shard_map``: batch over the data axes, heads
+    over ``head_axes`` — collective-free and bit-exact vs the single-device
+    kernel. Falls back to ``flash_attention_kernel`` when no multi-device
+    mesh is active (see ``repro.dist.shard``)."""
+    from repro.dist.shard import sharded_flash_attention
+    return sharded_flash_attention(q, k, v, n_kv_heads=n_kv_heads,
+                                   causal=causal, bq=bq, bk=bk,
+                                   head_axes=head_axes, mesh=mesh,
+                                   interpret=interpret)

@@ -31,3 +31,14 @@ def _bwd(bits, interpret, res, g):
 
 
 mixed_expectation_kernel.defvjp(_fwd, _bwd)
+
+
+def mixed_expectation_kernel_sharded(rows, probs, alpha, beta, bits, *,
+                                     mesh=None, interpret: bool = True):
+    """Forward Eq. (9) under ``shard_map``: rows split over every mesh axis
+    (row-parallel, collective-free, bit-exact), padded up to the device
+    count and unpadded after. Falls back to the fused kernel when no
+    multi-device mesh is active (see ``repro.dist.shard``)."""
+    from repro.dist.shard import sharded_mixed_expectation
+    return sharded_mixed_expectation(rows, probs, alpha, beta, bits,
+                                     mesh=mesh, interpret=interpret)

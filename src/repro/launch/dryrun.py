@@ -23,7 +23,7 @@ import jax
 
 from repro.launch.mesh import make_production_mesh
 from repro.launch.cells import build_cell
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, normalize_cost
 from repro.dist.mesh import use_mesh
 from repro.dist.sharding import cell_shardings
 from repro.configs import get_arch, ALL_ARCHS
@@ -44,9 +44,7 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per computation
-        cost = cost[0] if cost else None
+    cost = normalize_cost(compiled.cost_analysis())
     hlo = compiled.as_text()
     loop_aware = analyze(hlo)  # per-device, while-trip-count weighted
 

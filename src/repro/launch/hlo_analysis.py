@@ -34,6 +34,19 @@ _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
                "replica-id", "iota", "copy-done", "all-gather-done",
                "all-reduce-done", "collective-permute-done", "rng-bit-generator"}
 
+def normalize_cost(cost):
+    """``compiled.cost_analysis()`` → one dict or None.
+
+    jax 0.4.x returns a *list* of per-computation dicts on some
+    backend/version combinations (and an empty list for modules XLA declines
+    to cost, seen on sharded shard_map modules); newer jax returns the dict
+    directly. Every consumer (dryrun, shard_bench) goes through here so the
+    normalization lives in one place."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else None
+    return cost
+
+
 _HDR = re.compile(r"^(ENTRY )?%?([A-Za-z_][\w\.\-]*) \(")
 _SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _OP = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (.*?) ([\w\-]+)\((.*)$")

@@ -24,6 +24,7 @@ import jax
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
 from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.dist.mesh import parse_mesh_flag
 from repro.embeddings.table import FieldSpec
 from repro.models.dlrm import DLRMConfig
 from repro.serve import Engine
@@ -63,22 +64,29 @@ def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
 
 def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
                  bulk_rows: int = 4096, lookup_split: bool = True,
-                 store=None) -> Engine:
+                 store=None, mesh=None, shard_lookup: bool | None = None
+                 ) -> Engine:
     """An engine with the standard cell-shape registry for one DLRM table.
 
     With a ``repro.cache.TieredTableStore`` in ``store``, the same shapes are
     additionally registered as tiered cells (``tiered_p99``/``tiered_bulk``)
-    served through ``engine.score_tiered``."""
+    served through ``engine.score_tiered``. A multi-device ``mesh`` compiles
+    every cell against it; ``shard_lookup`` (default: on exactly when the
+    mesh has >1 device) routes the packed/hot gathers through the
+    ``shard_map`` wrappers of ``repro.dist.shard``."""
     from repro.models.dlrm import DLRM
-    engine = Engine()
+    engine = Engine(mesh=mesh)
+    if shard_lookup is None:
+        shard_lookup = engine.mesh.size > 1
     engine.register_packed_model(
         "dlrm", DLRM, cfg, params, state, buffers,
         shapes={"serve_p99": p99_rows, "serve_bulk": bulk_rows},
-        lookup_split=lookup_split)
+        lookup_split=lookup_split, shard_lookup=shard_lookup)
     if store is not None:
         engine.register_tiered_model(
             "dlrm", DLRM, cfg, params, state, buffers, store,
-            shapes={"tiered_p99": p99_rows, "tiered_bulk": bulk_rows})
+            shapes={"tiered_p99": p99_rows, "tiered_bulk": bulk_rows},
+            shard_lookup=shard_lookup)
     return engine
 
 
@@ -101,9 +109,19 @@ def main(argv=None):
                          "pinning this fraction of features device-resident "
                          "(repro.cache; requests go through score_tiered "
                          "with cold fills prefetched one chunk ahead)")
+    ap.add_argument("--mesh", default=None,
+                    help="'dp,mp' or 'auto': compile the serve cells against "
+                         "a (data, model) device mesh — requests batch-shard "
+                         "over data, packed subtables row-shard over model "
+                         "and the fused lookup runs under shard_map "
+                         "(repro.dist.shard). Virtualize CPU devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", default=None,
                     help="write the latency/compile summary to this path")
     args = ap.parse_args(argv)
+    mesh = parse_mesh_flag(args.mesh)
+    if mesh is not None:
+        print(f"[serve] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     cfg, params, state, buffers, spec, res = train_packed_dlrm(
         train_steps=args.train_steps)
@@ -122,7 +140,7 @@ def main(argv=None):
 
     engine = build_engine(cfg, params, state, buffers,
                           p99_rows=args.p99_rows, bulk_rows=args.bulk_rows,
-                          store=store)
+                          store=store, mesh=mesh)
     print(f"[serve] registered cells: "
           f"{dict(sorted(engine.registered_shapes.items()))} "
           f"(compiles={engine.compile_count})")

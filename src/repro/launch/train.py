@@ -19,6 +19,7 @@ from repro.configs import get_arch
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
 from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.dist.mesh import parse_mesh_flag
 from repro.models.dlrm import DLRMConfig
 from repro.train.loop import Trainer
 from repro.train.optimizer import adam
@@ -41,9 +42,19 @@ def main():
                     help="stage batches on device one step ahead of compute "
                          "(repro.cache.PrefetchPipeline); loss-identical to "
                          "the synchronous loop")
+    ap.add_argument("--mesh", default=None,
+                    help="'dp,mp' or 'auto': run the train step under "
+                         "shard_map on a (data, model) device mesh — batch "
+                         "data-parallel, embedding-table rows sharded over "
+                         "the model axis with row-shard-local grad updates "
+                         "(repro.dist.shard). Virtualize CPU devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    mesh = parse_mesh_flag(args.mesh)
+    if mesh is not None:
+        print(f"[train] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     spec = get_arch(args.arch)
     if spec.family != "recsys":
@@ -75,7 +86,7 @@ def main():
             search_steps=args.steps,
             retrain_steps=args.retrain_steps or args.steps,
             eval_fn=build(jax.random.PRNGKey(args.seed), "plain", {})["eval_fn"],
-            ckpt_dir=args.ckpt_dir, prefetch=args.prefetch)
+            ckpt_dir=args.ckpt_dir, prefetch=args.prefetch, mesh=mesh)
         print(f"[train] MPE ratio={res['storage_ratio']:.4f} "
               f"avg_bits={res['avg_bits']:.2f} eval={res['eval']}")
         return
@@ -97,7 +108,7 @@ def main():
 
     trainer = Trainer(bundle["loss_fn"], bundle["params"], bundle["buffers"],
                       bundle["state"], adam(args.lr), ckpt_dir=args.ckpt_dir,
-                      post_update=post)
+                      post_update=post, mesh=mesh)
     trainer.restore()
     trainer.run(lambda s: ds.batch(s), args.steps, prefetch=args.prefetch)
     ev = bundle["eval_fn"](trainer.params, bundle["buffers"], trainer.state)

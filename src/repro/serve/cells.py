@@ -68,13 +68,37 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
-def packed_score_step(model, cfg, *, top_k: int | None = None):
+def packed_score_step(model, cfg, *, top_k: int | None = None,
+                      shard_lookup: bool = False, rows_axes=("model",)):
     """The packed-table scoring computation shared by the live engine and the
     dry-run serve cells: eval-mode forward over a packed embedding config,
-    optionally topped with a candidate ``top_k``."""
+    optionally topped with a candidate ``top_k``.
+
+    ``shard_lookup`` routes the embedding gather through
+    ``repro.dist.shard.sharded_packed_lookup`` — the fused lookup runs
+    *inside* the partitioner as a ``shard_map`` over the mesh active at
+    trace time (the ``CellCache`` compiles under the engine's mesh), with
+    subtables row-sharded over ``rows_axes`` and one psum merging buckets.
+    The post-lookup interaction net (``model.interact``) is identical to the
+    monolithic path, so scores match the unsharded cell. Degrades to the
+    plain forward when compiled without a multi-device mesh."""
+    if not shard_lookup:
+        def serve_step(params, state, buffers, ids):
+            logits, _, _ = model.apply(params, buffers, state, {"ids": ids},
+                                       cfg, train=False)
+            if top_k is not None:
+                return tuple(jax.lax.top_k(logits, top_k))
+            return logits
+        return serve_step
+
+    from repro.dist.shard import sharded_packed_lookup
+    meta = {k: cfg.comp_cfg[k] for k in ("bits", "d", "n")}
+
     def serve_step(params, state, buffers, ids):
-        logits, _, _ = model.apply(params, buffers, state, {"ids": ids}, cfg,
-                                   train=False)
+        gids = ids + buffers["offsets"][None, :]
+        emb = sharded_packed_lookup(params["embedding"], meta, gids,
+                                    rows_axes=rows_axes)
+        logits, _ = model.interact(params, state, emb, gids, cfg, train=False)
         if top_k is not None:
             return tuple(jax.lax.top_k(logits, top_k))
         return logits
@@ -83,22 +107,26 @@ def packed_score_step(model, cfg, *, top_k: int | None = None):
 
 def packed_score_cell(model, cfg, params, state, buffers, *, batch: int,
                       arch: str, shape: str, dp=("data",),
-                      rows_axes=("model",)) -> ServeCellDef:
+                      rows_axes=("model",),
+                      shard_lookup: bool = False) -> ServeCellDef:
     """Batched CTR scoring from a packed table: ``ids (B, F) -> logits (B,)``.
 
     ``cfg`` must carry ``compressor="packed"`` with the table's comp_cfg;
-    ``params["embedding"]`` is the packed table pytree."""
+    ``params["embedding"]`` is the packed table pytree. ``shard_lookup``
+    compiles the ``shard_map`` lookup path (see ``packed_score_step``)."""
     n_fields = len(cfg.fields)
     return ServeCellDef(
         arch=arch, shape=shape, kind="score", batch=batch,
-        step_fn=packed_score_step(model, cfg),
+        step_fn=packed_score_step(model, cfg, shard_lookup=shard_lookup,
+                                  rows_axes=rows_axes),
         bound=(params, state, buffers),
         bound_pspecs=(packed_serve_pspecs(params, rows_axes=rows_axes),
                       replicate_like(state), replicate_like(buffers)),
         request_specs=(_sds((batch, n_fields), jnp.int32),),
         request_pspecs=(P(dp, None),),
         out_pspecs=P(dp),
-        meta={"kind": "score", "batch": batch, "n_fields": n_fields},
+        meta={"kind": "score", "batch": batch, "n_fields": n_fields,
+              "shard_lookup": shard_lookup},
         static=cfg,
     )
 
@@ -131,8 +159,8 @@ def packed_lookup_cell(table, meta, offsets, *, batch: int, n_fields: int,
 
 def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
                       batch: int, arch: str, shape: str, dp=("data",),
-                      rows_axes=("model",),
-                      row_keys=("wide", "fm_linear")) -> ServeCellDef:
+                      rows_axes=("model",), row_keys=("wide", "fm_linear"),
+                      shard_lookup: bool = False) -> ServeCellDef:
     """Batched CTR scoring from a **tiered** table: ``(ids (B, F), cold_fill
     (B, F, d)) -> logits (B,)``.
 
@@ -146,10 +174,22 @@ def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
 
     ``params`` is the serving param tree *without* the ``"embedding"`` entry
     (the tiered store owns the table); ``hot`` is ``TieredTableStore.hot``.
+    ``shard_lookup`` routes the hot-tier gather through
+    ``repro.dist.shard.sharded_tiered_hot_lookup`` (``shard_map`` over the
+    mesh active at compile time, hot subtables row-sharded per
+    ``tiered_hot_pspecs``) — scores still match the monolithic cell.
     """
     n_fields = len(cfg.fields)
     d = int(meta["d"])
-    hot_lookup = tiered_hot_lookup_fn(meta["bits"], d)
+    bits = tuple(meta["bits"])
+    if shard_lookup:
+        from repro.dist.shard import sharded_tiered_hot_lookup
+
+        def hot_lookup(hot_tree, gids):
+            return sharded_tiered_hot_lookup(hot_tree, bits, d, gids,
+                                             rows_axes=rows_axes)
+    else:
+        hot_lookup = tiered_hot_lookup_fn(bits, d)
 
     def tiered_step(p, st, bufs, hot_tree, ids, cold_fill):
         gids = ids + bufs["offsets"][None, :]
@@ -175,8 +215,9 @@ def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
                        _sds((batch, n_fields, d), jnp.float32)),
         request_pspecs=(P(dp, None), P(dp, None, None)),
         out_pspecs=P(dp),
-        meta={"kind": "tiered_score", "batch": batch, "n_fields": n_fields},
-        static=(cfg, tuple(meta["bits"]), d),
+        meta={"kind": "tiered_score", "batch": batch, "n_fields": n_fields,
+              "shard_lookup": shard_lookup},
+        static=(cfg, bits, d),
     )
 
 

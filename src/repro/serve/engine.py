@@ -115,16 +115,20 @@ class Engine:
     def register_packed_model(self, arch, model, cfg, params, state, buffers,
                               *, shapes: dict[str, int],
                               lookup_split: bool = True, dp=("data",),
-                              rows_axes=("model",)):
+                              rows_axes=("model",),
+                              shard_lookup: bool = False):
         """Register one score cell per (shape name → row capacity) for a flat
         CTR model serving from a packed table, each with its lookup-split
-        companion when ``lookup_split``."""
+        companion when ``lookup_split``. ``shard_lookup`` compiles the
+        ``shard_map`` lookup path against the engine's mesh (the fused
+        gather runs inside the partitioner — a no-op on a 1-device mesh)."""
         meta = {k: cfg.comp_cfg[k] for k in ("bits", "d", "n")}
         n_fields = len(cfg.fields)
         for shape, rows in shapes.items():
             cd = packed_score_cell(model, cfg, params, state, buffers,
                                    batch=rows, arch=arch, shape=shape,
-                                   dp=dp, rows_axes=rows_axes)
+                                   dp=dp, rows_axes=rows_axes,
+                                   shard_lookup=shard_lookup)
             lc = None
             if lookup_split:
                 lc = packed_lookup_cell(params["embedding"], meta,
@@ -136,7 +140,8 @@ class Engine:
 
     def register_tiered_model(self, arch, model, cfg, params, state, buffers,
                               store, *, shapes: dict[str, int], dp=("data",),
-                              rows_axes=("model",)):
+                              rows_axes=("model",),
+                              shard_lookup: bool = False):
         """Register one **tiered** score cell per (shape name → row capacity)
         serving from a ``repro.cache.TieredTableStore``: the store's hot tier
         binds into the executable (device-local gather), cold rows ride each
@@ -149,7 +154,8 @@ class Engine:
         for shape, rows in shapes.items():
             cd = tiered_score_cell(model, cfg, p, state, buffers, store.hot,
                                    store.meta, batch=rows, arch=arch,
-                                   shape=shape, dp=dp, rows_axes=rows_axes)
+                                   shape=shape, dp=dp, rows_axes=rows_axes,
+                                   shard_lookup=shard_lookup)
             reg = self._compile(cd)
             self._tiered[shape] = TieredCell(reg, store, offsets)
             self._tiered_batcher.register(shape, rows)

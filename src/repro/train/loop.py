@@ -30,7 +30,8 @@ class Trainer:
                  ckpt_dir: str | None = None, ckpt_every: int = 200,
                  ckpt_keep: int = 3, clip_norm: float = 10.0,
                  post_update: Callable | None = None,
-                 grad_compression: bool = False, donate: bool = True):
+                 grad_compression: bool = False, donate: bool = True,
+                 mesh=None, table_rows_axes=("model",)):
         self.loss_fn = loss_fn
         self.buffers = buffers
         self.optimizer = optimizer
@@ -44,11 +45,24 @@ class Trainer:
         self.carry = {"params": params, "state": state, "opt": opt_state,
                       "ef": ef_state}
 
+        # loss+grad: plain on one device; on a multi-device mesh the whole
+        # thing runs inside shard_map — batch data-parallel over the mesh,
+        # embedding-table rows sharded over `table_rows_axes` with
+        # row-shard-local grads, replicated params pmean'd (repro.dist.shard)
+        self.mesh = mesh
+        if mesh is not None and getattr(mesh, "size", 1) > 1:
+            from repro.dist.shard import sharded_value_and_grad
+            value_and_grad = sharded_value_and_grad(
+                self.loss_fn, mesh, rows_axes=table_rows_axes)
+        else:
+            def value_and_grad(params, buffers, state, batch, *, step):
+                return jax.value_and_grad(self.loss_fn, has_aux=True)(
+                    params, buffers, state, batch, step=step)
+
         def train_step(carry, batch, step):
             params, state, opt_state = carry["params"], carry["state"], carry["opt"]
-            (loss, (new_state, metric)), grads = jax.value_and_grad(
-                self.loss_fn, has_aux=True)(params, self.buffers, state, batch,
-                                            step=step)
+            (loss, (new_state, metric)), grads = value_and_grad(
+                params, self.buffers, state, batch, step=step)
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
             ef_state = carry["ef"]
             if self.grad_compression:

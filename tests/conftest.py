@@ -1,13 +1,36 @@
-"""Shared fixtures.
+"""Shared fixtures + the ``multidevice`` marker.
 
 Collection must never hard-fail on missing dev-only deps: modules using
 hypothesis (see requirements-dev.txt) begin with
 ``pytest.importorskip("hypothesis")`` so they collect as skipped when the
 dep is absent. ``scripts/verify.sh`` runs a collect-only smoke to enforce a
 clean import graph.
+
+``multidevice`` marks tests that need a real multi-device mesh (≥ 4 jax
+devices). The blocking CI ``multidevice`` job runs them in-process under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``; in a single-device
+session they auto-skip (the subprocess fallbacks in ``test_dist.py`` /
+``test_shard.py`` keep the coverage). The device count is read lazily so
+collection itself never initializes the jax backend.
 """
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs >= 4 jax devices (run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def pytest_runtest_setup(item):
+    if item.get_closest_marker("multidevice") is not None:
+        import jax
+        n = jax.device_count()
+        if n < 4:
+            pytest.skip(f"needs >= 4 jax devices, have {n} (set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=4)")
 
 
 @pytest.fixture

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze, split_computations
+from repro.launch.hlo_analysis import (analyze, normalize_cost,
+                                       split_computations)
 
 
 def _compile(fn, *specs):
@@ -53,3 +54,14 @@ def test_nested_scan_multiplies():
     f = analyze(_compile(nested, spec, spec))["flops_per_device"]
     expected = inner * outer * 2 * d ** 3
     assert abs(f - expected) / expected < 0.10
+
+
+def test_normalize_cost_handles_every_cost_analysis_shape():
+    """jax 0.4.x cost_analysis() returns [dict] (or [] on sharded shard_map
+    modules XLA declines to cost); newer jax returns the dict. The dryrun and
+    shard_bench consumers must see one dict or None either way."""
+    assert normalize_cost({"flops": 1.0}) == {"flops": 1.0}
+    assert normalize_cost([{"flops": 2.0}]) == {"flops": 2.0}
+    assert normalize_cost([]) is None
+    assert normalize_cost(()) is None
+    assert normalize_cost(None) is None
