@@ -1,0 +1,195 @@
+"""Request-lifecycle benchmark → BENCH_queue.json (queue/scheduler perf point).
+
+Two experiments over the admission-queue → coalescing-scheduler →
+compiled-cell stack:
+
+  1. **Open-loop QPS sweep** — seeded Poisson arrivals at each offered rate
+     drive `run_open_loop` (virtual-timeline replay; queue-wait is virtual,
+     assembly/compute measured wall-clock). Per point: p50/p99 end-to-end
+     latency, the queue/assembly/compute split, goodput, shed rate and
+     per-cell occupancy. Each point gets a fresh engine sharing the warm
+     `CellCache`, so sweep points are independent and recompiles stay zero.
+  2. **Continuous vs restart decode** — the same LM and prompt set generated
+     (a) through the continuous-batching decode lane (sequences join/leave a
+     slot-pooled KV cache between steps) and (b) per-request through the
+     classic decode cell (one sequence at a time, batch slots idle). Reports
+     tokens/s for both and the speedup.
+
+CI runs `--smoke` on CPU every PR, uploads the artifact and diffs it against
+`benchmarks/baselines/BENCH_queue.json` via `scripts/bench_compare.py`.
+
+    PYTHONPATH=src python benchmarks/queue_bench.py --smoke
+    PYTHONPATH=src python benchmarks/queue_bench.py --out benchmarks/artifacts/BENCH_queue.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.serve import build_engine, run_open_loop, train_packed_dlrm
+from repro.serve import (Engine, LatencyStats, RequestStats, lm_decode_cell,
+                         lm_decode_slotted_cell)
+
+FULL = dict(field_vocabs=(3000, 2000, 1500, 1000), train_steps=120,
+            requests=120, batch=60, p99_rows=512, bulk_rows=4096,
+            qps_sweep=(50.0, 200.0, 800.0), deadline_ms=2000.0,
+            queue_capacity=256,
+            lm=dict(slots=4, max_len=48, prompts=24, prompt_len=8, max_new=16))
+SMOKE = dict(field_vocabs=(600, 400, 500), train_steps=30,
+             requests=40, batch=40, p99_rows=128, bulk_rows=1024,
+             qps_sweep=(50.0, 400.0), deadline_ms=2000.0,
+             queue_capacity=256,
+             lm=dict(slots=2, max_len=24, prompts=8, prompt_len=4, max_new=8))
+
+
+def sweep_point(base_engine, cfg, spec, qps: float, model_args) -> dict:
+    """One offered-QPS point on a fresh engine sharing the warm cell cache."""
+    engine = Engine(mesh=base_engine.mesh, cache=base_engine.cache,
+                    queue_capacity=cfg["queue_capacity"])
+    engine.register_packed_model(*model_args,
+                                 shapes={"serve_p99": cfg["p99_rows"],
+                                         "serve_bulk": cfg["bulk_rows"]})
+    req_ds = SyntheticCTR(spec._replace(batch_size=cfg["batch"]))
+    engine.score(req_ds.batch(9_999)["ids"])        # warm dispatch path
+    # reset the recorders so the warm-up dispatch skews neither the latency
+    # percentiles nor the occupancy baseline
+    engine.stats = LatencyStats()
+    engine.rstats = RequestStats()
+    ol = run_open_loop(engine, lambda i: req_ds.batch(10_000 + i)["ids"],
+                       cfg["requests"], qps, seed=0,
+                       deadline_ms=cfg["deadline_ms"])
+    rs = engine.request_summary()["score"]
+    occ = engine.counters()["occupancy"]
+    offered = cfg["requests"]
+    return {
+        "offered_qps": qps,
+        "goodput_qps": ol["goodput_qps"],
+        "completed": ol["completed"],
+        "shed": ol["shed"],
+        "shed_rate": ol["shed"] / offered if offered else 0.0,
+        "latency_p50_ms": rs["latency"]["p50_ms"],
+        "latency_p99_ms": rs["latency"]["p99_ms"],
+        "queue_p50_ms": rs["queue"]["p50_ms"],
+        "assembly_p50_ms": rs["assembly"]["p50_ms"],
+        "compute_p50_ms": rs["compute"]["p50_ms"],
+        "occupancy": {cell: v["occupancy"] for cell, v in occ.items()},
+    }
+
+
+def decode_experiment(cfg: dict) -> dict:
+    """Continuous-batching vs per-request ("restart") decode throughput."""
+    from repro.models.lm import LM, LMConfig
+    lm = cfg["lm"]
+    lcfg = LMConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab=128, remat=False)
+    params, buffers = LM.init(jax.random.PRNGKey(0), lcfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, lcfg.vocab, size=rng.integers(
+        2, lm["prompt_len"] + 1)).astype(np.int32) for _ in range(lm["prompts"])]
+
+    # continuous batching: all prompts share the slot pool
+    eng = Engine()
+    eng.register(lm_decode_slotted_cell(lcfg, params, buffers,
+                                        batch=lm["slots"],
+                                        max_len=lm["max_len"], arch="lm"))
+    warm = eng.submit_decode(prompts[0], 2)
+    eng.drain()
+    eng.poll(warm)
+    t0 = time.perf_counter()
+    tickets = [eng.submit_decode(p, lm["max_new"]) for p in prompts]
+    eng.drain()
+    cont_s = time.perf_counter() - t0
+    n_tokens = sum(len(eng.poll(t)) for t in tickets)
+    compiles = eng.compile_count
+
+    # restart baseline: one sequence at a time through the classic cell
+    eng2 = Engine()
+    eng2.register(lm_decode_cell(lcfg, params, buffers, batch=lm["slots"],
+                                 max_len=lm["max_len"], arch="lm"))
+    caches = None
+    _, caches = eng2.decode(np.array([[1]], np.int32), caches)  # warm
+    t0 = time.perf_counter()
+    for p in prompts:
+        caches, out = None, []
+        for i in range(len(p) + lm["max_new"] - 1):
+            tok = p[i] if i < len(p) else out[-1]
+            logits, caches = eng2.decode(np.array([[tok]], np.int32), caches)
+            if i >= len(p) - 1:
+                out.append(int(np.argmax(logits[0])))
+    restart_s = time.perf_counter() - t0
+
+    return {
+        "slots": lm["slots"], "sequences": lm["prompts"],
+        "generated_tokens": int(n_tokens),
+        "continuous_tok_s": n_tokens / cont_s,
+        "restart_tok_s": n_tokens / restart_s,
+        "continuous_speedup": restart_s / cont_s,
+        "compiles_after_warmup": int(eng.compile_count - compiles),
+    }
+
+
+def run(cfg: dict) -> dict:
+    t0 = time.time()
+    serve_cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=cfg["field_vocabs"], train_steps=cfg["train_steps"])
+    train_s = time.time() - t0
+
+    from repro.models.dlrm import DLRM
+    base = build_engine(serve_cfg, params, state, buffers,
+                        p99_rows=cfg["p99_rows"], bulk_rows=cfg["bulk_rows"],
+                        queue_capacity=cfg["queue_capacity"])
+    model_args = ("dlrm", DLRM, serve_cfg, params, state, buffers)
+
+    points = [sweep_point(base, cfg, spec, q, model_args)
+              for q in cfg["qps_sweep"]]
+    for p in points:
+        print(f"[queue_bench] qps={p['offered_qps']:.0f} "
+              f"goodput={p['goodput_qps']:.1f} "
+              f"p50={p['latency_p50_ms']:.2f}ms p99={p['latency_p99_ms']:.2f}ms "
+              f"shed_rate={p['shed_rate']:.2f}")
+
+    decode = decode_experiment(cfg)
+    print(f"[queue_bench] decode: continuous={decode['continuous_tok_s']:.1f} "
+          f"tok/s restart={decode['restart_tok_s']:.1f} tok/s "
+          f"speedup={decode['continuous_speedup']:.2f}x")
+
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items() if k != "lm"},
+        "env": {"jax": jax.__version__, "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "platform": platform.platform()},
+        "train_s": round(train_s, 2),
+        "points": points,
+        "decode": decode,
+        "unix_time": int(time.time()),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny table + short sweep (the CI data point)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default benchmarks/artifacts/BENCH_queue.json)")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or os.path.join("benchmarks", "artifacts",
+                                        "BENCH_queue.json")
+    result = run(dict(SMOKE if args.smoke else FULL,
+                      mode="smoke" if args.smoke else "full"))
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[queue_bench] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,9 @@ silently shipping.
 Comparable metrics are the flattened numeric leaves of each artifact, minus
 environment-dependent keys (timestamps, one-off setup costs, env/config
 records). Latency-ish keys (``*_ms``, ``p50``/``p99``, ``ms_per_step``) get
-a ⚠ marker above +20% — advisory only on shared runners.
+a ⚠ marker above +20%; throughput-ish keys (``goodput``, ``*_tok_s``,
+``*_speedup``, ``occupancy`` — higher is better, BENCH_queue) get one below
+-20% — advisory only on shared runners.
 
     python scripts/bench_compare.py --fresh . --baseline benchmarks/baselines
 Exit code is always 0: visibility, not a gate.
@@ -28,6 +30,8 @@ import sys
 SKIP = re.compile(r"(^|\.)(unix_time|train_s|register_s|compile|compiles|"
                   r"env|config)(\.|$)")
 LATENCY = re.compile(r"(_ms|p50|p99|ms_per_step)($|\.)")
+# higher-is-better metrics (BENCH_queue): warn on *decreases* instead
+THROUGHPUT = re.compile(r"(goodput|_tok_s|_speedup|occupancy)($|\.|_)")
 WARN_PCT = 20.0
 
 
@@ -69,7 +73,11 @@ def render(name: str, rows: list[tuple], top: int = 12) -> str:
              "|---|---:|---:|---:|---|"]
     ranked = sorted(rows, key=lambda r: -abs(r[3]))[:top]
     for key, old, new, delta in ranked:
-        warn = "⚠" if (LATENCY.search(key) and delta > WARN_PCT) else ""
+        warn = ""
+        if LATENCY.search(key) and delta > WARN_PCT:
+            warn = "⚠"
+        elif THROUGHPUT.search(key) and delta < -WARN_PCT:
+            warn = "⚠"
         d = "inf" if delta == float("inf") else f"{delta:+.1f}"
         lines.append(f"| `{key}` | {fmt_val(old)} | {fmt_val(new)} | {d} | "
                      f"{warn} |")

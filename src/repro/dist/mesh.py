@@ -60,11 +60,15 @@ def make_device_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mes
 
 
 def parse_mesh_flag(flag: str | None) -> Mesh | None:
-    """``--mesh dp,mp`` CLI flag → a ("data", "model") host mesh, or None.
+    """``--mesh`` CLI flag → a host mesh, or None.
 
-    ``"2,2"`` builds a 2×2 mesh over the visible devices (fails loudly when
-    fewer than dp·mp are visible — virtualize CPU devices with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``"auto"``
+    ``"dp,mp"`` (e.g. ``"2,2"``) builds a ("data", "model") mesh;
+    ``"pod,dp,mp"`` (e.g. ``"1,2,2"``) a ("pod", "data", "model") multi-pod
+    mesh — the shard wrappers are axis-generic, so everything that runs on
+    the two-axis mesh runs on the three-axis one (batch spreads over every
+    non-"model" axis). Fails loudly when fewer than the product of the axis
+    sizes are visible — virtualize CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. ``"auto"``
     spreads every visible device on the data axis; None/"" disables.
     """
     if not flag:
@@ -72,20 +76,31 @@ def parse_mesh_flag(flag: str | None) -> Mesh | None:
     if flag == "auto":
         return host_mesh()
     try:
-        n_data, n_model = (int(x) for x in flag.split(","))
+        sizes = tuple(int(x) for x in flag.split(","))
+        if len(sizes) not in (2, 3):
+            raise ValueError(flag)
     except ValueError as e:
-        raise SystemExit(f"--mesh expects 'dp,mp' or 'auto', got {flag!r}") from e
-    n_dev = len(jax.devices())
-    if n_data * n_model > n_dev:
         raise SystemExit(
-            f"--mesh {flag}: needs {n_data * n_model} devices, "
+            f"--mesh expects 'dp,mp', 'pod,dp,mp' or 'auto', got {flag!r}"
+        ) from e
+    n_need = 1
+    for s in sizes:
+        n_need *= s
+    n_dev = len(jax.devices())
+    if n_need > n_dev:
+        raise SystemExit(
+            f"--mesh {flag}: needs {n_need} devices, "
             f"{n_dev} visible (set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={n_data * n_model})")
-    return host_mesh(n_data=n_data, n_model=n_model)
+            f"--xla_force_host_platform_device_count={n_need})")
+    if len(sizes) == 2:
+        return host_mesh(n_data=sizes[0], n_model=sizes[1])
+    return host_mesh(n_data=sizes[1], n_model=sizes[2], n_pod=sizes[0])
 
 
-def host_mesh(n_data: int | None = None, n_model: int = 1) -> Mesh:
-    """("data", "model") mesh over host devices — the test-time mesh.
+def host_mesh(n_data: int | None = None, n_model: int = 1,
+              n_pod: int | None = None) -> Mesh:
+    """("data", "model") mesh over host devices — the test-time mesh — or,
+    with ``n_pod``, the multi-pod ("pod", "data", "model") layout.
 
     Defaults to all visible devices on the data axis. Under
     ``--xla_force_host_platform_device_count=4`` this yields a real 4-way
@@ -94,6 +109,10 @@ def host_mesh(n_data: int | None = None, n_model: int = 1) -> Mesh:
     """
     devs = jax.devices()
     if n_data is None:
-        n_data = len(devs) // n_model
-    grid = np.asarray(devs[: n_data * n_model]).reshape(n_data, n_model)
-    return Mesh(grid, ("data", "model"))
+        n_data = len(devs) // ((n_pod or 1) * n_model)
+    if n_pod is None:
+        grid = np.asarray(devs[: n_data * n_model]).reshape(n_data, n_model)
+        return Mesh(grid, ("data", "model"))
+    grid = np.asarray(devs[: n_pod * n_data * n_model]).reshape(
+        n_pod, n_data, n_model)
+    return Mesh(grid, ("pod", "data", "model"))

@@ -31,7 +31,8 @@ from repro.configs import get_arch, ALL_ARCHS
 
 def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
              verbose: bool = True, save_dir: str | None = None,
-             overrides: dict | None = None, tag: str = "") -> dict:
+             overrides: dict | None = None, tag: str = "",
+             cond_mode: str = "sum") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     cell = build_cell(arch_id, shape, multi_pod, overrides)
@@ -46,7 +47,10 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
     mem = compiled.memory_analysis()
     cost = normalize_cost(compiled.cost_analysis())
     hlo = compiled.as_text()
-    loop_aware = analyze(hlo)  # per-device, while-trip-count weighted
+    # per-device, while-trip-count weighted; cond_mode picks the lax.cond
+    # branch accounting ("min" reports the common write-one-slot branch of
+    # the kv_int8 decode step instead of the conservative both-branch sum)
+    loop_aware = analyze(hlo, cond_mode=cond_mode)
 
     n_chips = mesh.devices.size
     result = {
@@ -59,6 +63,7 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
         "xla_bytes_unweighted": (float(cost.get("bytes accessed", 0.0))
                                  if cost else None),
         # loop-aware per-device numbers (the roofline inputs)
+        "cond_mode": cond_mode,
         "flops_per_device": loop_aware["flops_per_device"],
         "hbm_bytes_per_device": loop_aware["hbm_bytes_per_device"],
         "collectives_per_device": loop_aware["collectives_per_device"],
@@ -103,6 +108,13 @@ def main():
                          "variants, e.g. 'shard_activations=true,"
                          "attn_expand_kv=true,moe.shard_dispatch=true'")
     ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    ap.add_argument("--cond-bytes", default="sum",
+                    choices=["sum", "max", "min"], dest="cond_bytes",
+                    help="lax.cond branch accounting in the static byte "
+                         "counts: 'sum' charges both branches (conservative "
+                         "upper bound), 'max'/'min' only the heaviest/"
+                         "lightest — 'min' reports the common write-one-slot "
+                         "branch of the kv_int8 decode cells")
     args = ap.parse_args()
 
     overrides = None
@@ -127,7 +139,8 @@ def main():
     for arch_id, shape in cells:
         try:
             run_cell(arch_id, shape, multi_pod=args.multi_pod,
-                     save_dir=args.out, overrides=overrides, tag=args.tag)
+                     save_dir=args.out, overrides=overrides, tag=args.tag,
+                     cond_mode=args.cond_bytes)
         except Exception as e:  # noqa: BLE001 — report every failing cell
             failures.append((arch_id, shape, repr(e)))
             print(f"[dryrun] FAIL {arch_id}/{shape}: {e}")

@@ -15,6 +15,15 @@ multiplicative weights down the call graph, and accumulates:
 
 All shapes in post-SPMD HLO are per-partition, so every total is per-device —
 exactly what the per-chip roofline terms need.
+
+``lax.cond`` lowers to an HLO ``conditional`` whose branch computations run
+*alternatively* at runtime, which a static analysis can't resolve —
+``cond_mode`` selects the accounting: ``"sum"`` (default) charges every
+branch (the conservative static upper bound), ``"max"`` only the heaviest
+branch, ``"min"`` only the lightest. The int8 KV-cache decode step gates its
+rare full-cache requant rewrite behind a cond, so ``cond_mode="min"``
+reports the common write-one-slot decode step (``--cond-bytes min`` on
+``repro.launch.dryrun``).
 """
 from __future__ import annotations
 
@@ -141,10 +150,23 @@ def _dot_flops(line: str, defs: dict) -> float:
     return 2.0 * out_elems * contracted
 
 
-def analyze(hlo: str) -> dict:
-    entry, comps = split_computations(hlo)
+COND_MODES = ("sum", "max", "min")
 
-    # per-computation static facts (two passes: defs table, then ops)
+
+def _branch_targets(line: str) -> tuple:
+    """Branch computations of an HLO ``conditional`` op (both syntaxes)."""
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        return tuple(_REF.findall(m.group(1)))
+    m = re.search(r"true_computation=%?([\w\.\-]+), "
+                  r"false_computation=%?([\w\.\-]+)", line)
+    if m:
+        return (m.group(1), m.group(2))
+    return ()
+
+
+def _collect_facts(comps: dict) -> dict:
+    """Per-computation static facts (two passes: defs table, then ops)."""
     facts = {}
     for name, lines in comps.items():
         defs = {}
@@ -156,7 +178,7 @@ def analyze(hlo: str) -> dict:
                     defs[m.group(1)] = _shape_dims(out_m)
             else:  # parameters: "%p = f32[..]{..} parameter(0)" matches _OP;
                 pass  # others (e.g. constants without parens) are irrelevant
-        whiles, calls, dots = [], [], 0.0
+        whiles, calls, conds, dots = [], [], [], 0.0
         bytes_ops = 0
         coll = defaultdict(lambda: [0, 0])  # kind -> [bytes, count]
         for line in lines:
@@ -169,8 +191,12 @@ def analyze(hlo: str) -> dict:
                               line)
                 if w:
                     whiles.append((w.group(1), w.group(2)))
+            if opcode == "conditional":
+                branches = _branch_targets(line)
+                if branches:
+                    conds.append(branches)
             cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
-            if cm and opcode != "while":
+            if cm and opcode not in ("while", "conditional"):
                 calls.append(cm.group(1))
             if opcode == "dot":
                 dots += _dot_flops(line, defs)
@@ -200,9 +226,9 @@ def analyze(hlo: str) -> dict:
                 if passthrough:
                     out_b = 0  # aliased in-place write; updates counted above
                 bytes_ops += out_b + operand_bytes
-        facts[name] = {"whiles": whiles, "calls": calls, "dot_flops": dots,
-                       "bytes": bytes_ops, "coll": dict(coll),
-                       "is_fusion_body": False}
+        facts[name] = {"whiles": whiles, "calls": calls, "conds": conds,
+                       "dot_flops": dots, "bytes": bytes_ops,
+                       "coll": dict(coll), "is_fusion_body": False}
 
     # mark fusion bodies (reached via calls= from fusion ops) — their ops are
     # VMEM-internal; bytes counted at the call site instead.
@@ -213,9 +239,48 @@ def analyze(hlo: str) -> dict:
                 cm = re.search(r"calls=%?([\w\.\-]+)", line)
                 if cm and cm.group(1) in facts:
                     facts[cm.group(1)]["is_fusion_body"] = True
+    return facts
 
-    # weight propagation over the call graph
+
+def _subtree_bytes(name, facts, comps, cond_mode, memo, stack) -> float:
+    """Ranking metric for branch selection: the recursive byte cost of one
+    computation's subtree (fusion bodies contribute at their call sites)."""
+    if name not in facts or name in stack:
+        return 0.0
+    if name in memo:
+        return memo[name]
+    stack.add(name)
+    f = facts[name]
+    total = 0.0 if f["is_fusion_body"] else float(f["bytes"])
+    for cond, body in f["whiles"]:
+        trips = _trip_count(comps.get(cond, []))
+        total += (trips + 1) * _subtree_bytes(cond, facts, comps, cond_mode,
+                                              memo, stack)
+        total += trips * _subtree_bytes(body, facts, comps, cond_mode, memo,
+                                        stack)
+    for callee in f["calls"]:
+        total += _subtree_bytes(callee, facts, comps, cond_mode, memo, stack)
+    for branches in f["conds"]:
+        sub = [_subtree_bytes(b, facts, comps, cond_mode, memo, stack)
+               for b in branches]
+        if sub:
+            total += (sum(sub) if cond_mode == "sum"
+                      else max(sub) if cond_mode == "max" else min(sub))
+    stack.discard(name)
+    memo[name] = total
+    return total
+
+
+def _propagate_weights(entry, comps, facts, cond_mode: str) -> dict:
+    """Multiplicative execution weights down the call graph: while bodies by
+    their trip counts, calls at parent weight, ``conditional`` branches per
+    ``cond_mode`` ("sum" charges every branch; "max"/"min" only the
+    heaviest/lightest by recursive byte cost)."""
+    if cond_mode not in COND_MODES:
+        raise ValueError(f"cond_mode must be one of {COND_MODES}, "
+                         f"got {cond_mode!r}")
     weights = defaultdict(float)
+    memo: dict = {}
 
     def visit(name, w):
         if name not in facts or w <= 0:
@@ -228,8 +293,25 @@ def analyze(hlo: str) -> dict:
             visit(body, w * trips)
         for callee in f["calls"]:
             visit(callee, w)
+        for branches in f["conds"]:
+            if cond_mode == "sum":
+                for b in branches:
+                    visit(b, w)
+            elif branches:
+                costs = [_subtree_bytes(b, facts, comps, cond_mode, memo,
+                                        set()) for b in branches]
+                picked = (costs.index(max(costs)) if cond_mode == "max"
+                          else costs.index(min(costs)))
+                visit(branches[picked], w)
 
     visit(entry, 1.0)
+    return weights
+
+
+def analyze(hlo: str, *, cond_mode: str = "sum") -> dict:
+    entry, comps = split_computations(hlo)
+    facts = _collect_facts(comps)
+    weights = _propagate_weights(entry, comps, facts, cond_mode)
 
     flops = 0.0
     hbm_bytes = 0.0
@@ -250,43 +332,15 @@ def analyze(hlo: str) -> dict:
         "hbm_bytes_per_device": hbm_bytes,
         "collectives_per_device": coll_out,
         "n_computations": len(comps),
+        "cond_mode": cond_mode,
     }
 
 
-def breakdown(hlo: str, top: int = 12) -> list:
+def breakdown(hlo: str, top: int = 12, *, cond_mode: str = "sum") -> list:
     """Top computations by weighted bytes/flops — the §Perf profiling view."""
     entry, comps = split_computations(hlo)
-    # recompute weights (analyze doesn't return them)
-    from collections import defaultdict
-    facts = {}
-    for name, lines in comps.items():
-        whiles, calls = [], []
-        for line in lines:
-            m = _OP.match(line)
-            if not m:
-                continue
-            if m.group(3) == "while":
-                w = re.search(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)", line)
-                if w:
-                    whiles.append((w.group(1), w.group(2)))
-            cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
-            if cm and m.group(3) != "while":
-                calls.append(cm.group(1))
-        facts[name] = (whiles, calls)
-    weights = defaultdict(float)
-
-    def visit(name, w):
-        if name not in facts:
-            return
-        weights[name] += w
-        whiles, calls = facts[name]
-        for cond, body in whiles:
-            visit(cond, w * (_trip_count(comps.get(cond, [])) + 1))
-            visit(body, w * _trip_count(comps.get(cond, [])))
-        for c in calls:
-            visit(c, w)
-
-    visit(entry, 1.0)
+    facts = _collect_facts(comps)
+    weights = _propagate_weights(entry, comps, facts, cond_mode)
 
     rows = []
     for name, lines in comps.items():

@@ -8,11 +8,19 @@ the registered shapes via pad-to-shape batching — ``--batch 300`` really
 issues 300-row requests (padded onto the 512-row p99 cell), it no longer
 silently falls back to the training batch size.
 
+``--qps`` switches to **open-loop** mode: request arrivals follow seeded
+exponential inter-arrival times at the offered rate (the way offline replay
+of production traffic drives a server — arrivals don't wait for service), and
+concurrent requests coalesce through the admission queue + scheduler onto
+shared padded cells. The report then adds the per-request queue-wait /
+batch-assembly / compute breakdown, shed counts and per-cell occupancy.
+
 Per-cell p50/p99 latency is reported in the Figure-5 lookup-vs-compute split,
 plus the cell-cache counters (a warm process performs zero recompiles).
 
     python -m repro.launch.serve --steps 20 --batch 300
     python -m repro.launch.serve --steps 50 --batch 300 --bulk 20000 --json out.json
+    python -m repro.launch.serve --qps 20 --steps 100 --batch 60 --deadline-ms 2000
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import argparse
 import json
 
 import jax
+import numpy as np
 
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
@@ -64,8 +73,8 @@ def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
 
 def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
                  bulk_rows: int = 4096, lookup_split: bool = True,
-                 store=None, mesh=None, shard_lookup: bool | None = None
-                 ) -> Engine:
+                 store=None, mesh=None, shard_lookup: bool | None = None,
+                 queue_capacity: int = 1024) -> Engine:
     """An engine with the standard cell-shape registry for one DLRM table.
 
     With a ``repro.cache.TieredTableStore`` in ``store``, the same shapes are
@@ -75,7 +84,7 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
     mesh has >1 device) routes the packed/hot gathers through the
     ``shard_map`` wrappers of ``repro.dist.shard``."""
     from repro.models.dlrm import DLRM
-    engine = Engine(mesh=mesh)
+    engine = Engine(mesh=mesh, queue_capacity=queue_capacity)
     if shard_lookup is None:
         shard_lookup = engine.mesh.size > 1
     engine.register_packed_model(
@@ -88,6 +97,49 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
             shapes={"tiered_p99": p99_rows, "tiered_bulk": bulk_rows},
             shard_lookup=shard_lookup)
     return engine
+
+
+def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
+                  seed: int = 0, deadline_ms: float | None = None,
+                  kind: str = "score") -> dict:
+    """Open-loop replay: offered traffic at ``qps`` on a virtual timeline.
+
+    Arrivals are seeded exponential inter-arrival times (Poisson traffic at
+    the offered rate); they **don't wait for service** — when the offered
+    rate exceeds capacity the queue grows until the admission policy sheds.
+    The scheduler threads the virtual clock through dispatch (queue-wait is
+    virtual-time from arrival to first dispatch) while assembly/compute are
+    measured wall-clock, so one CPU run still produces an honest breakdown.
+
+    Returns {tickets, makespan_s, offered_qps, goodput_qps, completed,
+    shed} — per-request latency percentiles live in
+    ``engine.request_summary()``.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n_requests))
+    tickets, shed = [], 0
+    now, i = 0.0, 0
+    while i < n_requests or engine.scheduler.busy:
+        if not engine.scheduler.busy and i < n_requests and arrivals[i] > now:
+            now = float(arrivals[i])        # idle server: jump to the arrival
+        while i < n_requests and arrivals[i] <= now:
+            t = engine.submit(make_ids(i), kind=kind, now=float(arrivals[i]),
+                              deadline_ms=deadline_ms)
+            if t is None:
+                shed += 1
+            tickets.append(t)
+            i += 1
+        now = engine.sched_step(now=now)
+    from repro.serve.queue import DONE, SHED
+    completed = sum(1 for t in tickets
+                    if t is not None and engine._requests[t].status == DONE)
+    shed += sum(1 for t in tickets
+                if t is not None and engine._requests[t].status == SHED)
+    makespan = max(now, float(arrivals[-1])) if n_requests else now
+    return {"tickets": tickets, "makespan_s": makespan,
+            "offered_qps": qps,
+            "goodput_qps": completed / makespan if makespan > 0 else 0.0,
+            "completed": completed, "shed": shed}
 
 
 def main(argv=None):
@@ -104,17 +156,32 @@ def main(argv=None):
                     help="serve_bulk cell capacity")
     ap.add_argument("--bulk", type=int, default=0,
                     help="also issue one bulk job of this many rows")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="open-loop mode: offer --steps requests of --batch "
+                         "rows at this rate with seeded exponential "
+                         "inter-arrival times (offline replay of production "
+                         "traffic); concurrent requests coalesce through the "
+                         "admission queue onto shared padded cells")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="open-loop per-request deadline: requests still "
+                         "queued past it are shed instead of dispatched")
+    ap.add_argument("--queue-capacity", type=int, default=1024,
+                    help="admission-queue bound (reject-on-full shedding)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the open-loop inter-arrival times")
     ap.add_argument("--hot-frac", type=float, default=None,
                     help="also serve through a hot/cold TieredTableStore "
                          "pinning this fraction of features device-resident "
                          "(repro.cache; requests go through score_tiered "
                          "with cold fills prefetched one chunk ahead)")
     ap.add_argument("--mesh", default=None,
-                    help="'dp,mp' or 'auto': compile the serve cells against "
-                         "a (data, model) device mesh — requests batch-shard "
-                         "over data, packed subtables row-shard over model "
-                         "and the fused lookup runs under shard_map "
-                         "(repro.dist.shard). Virtualize CPU devices with "
+                    help="'dp,mp', 'pod,dp,mp' or 'auto': compile the serve "
+                         "cells against a (data, model) — or multi-pod "
+                         "(pod, data, model) — device mesh: requests "
+                         "batch-shard over the non-model axes, packed "
+                         "subtables row-shard over model and the fused "
+                         "lookup runs under shard_map (repro.dist.shard). "
+                         "Virtualize CPU devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--json", default=None,
                     help="write the latency/compile summary to this path")
@@ -140,18 +207,26 @@ def main(argv=None):
 
     engine = build_engine(cfg, params, state, buffers,
                           p99_rows=args.p99_rows, bulk_rows=args.bulk_rows,
-                          store=store, mesh=mesh)
+                          store=store, mesh=mesh,
+                          queue_capacity=args.queue_capacity)
     print(f"[serve] registered cells: "
           f"{dict(sorted(engine.registered_shapes.items()))} "
           f"(compiles={engine.compile_count})")
 
     # request stream at the *requested* batch size — decoupled from training
     req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
-    for step in range(args.steps):
-        ids = req_ds.batch(10_000 + step)["ids"]
-        engine.score(ids)
-        if store is not None:
-            engine.score_tiered(ids)
+    open_loop = None
+    if args.qps:
+        engine.score(req_ds.batch(9_999)["ids"])   # warm the cells
+        open_loop = run_open_loop(
+            engine, lambda i: req_ds.batch(10_000 + i)["ids"], args.steps,
+            args.qps, seed=args.seed, deadline_ms=args.deadline_ms)
+    else:
+        for step in range(args.steps):
+            ids = req_ds.batch(10_000 + step)["ids"]
+            engine.score(ids)
+            if store is not None:
+                engine.score_tiered(ids)
     if args.bulk:
         bulk_ds = SyntheticCTR(spec._replace(batch_size=args.bulk))
         bulk_ids = bulk_ds.batch(99_999)["ids"]
@@ -161,11 +236,21 @@ def main(argv=None):
 
     skip = min(3, max(args.steps - 1, 0))  # drop compile-adjacent warmup
     print(f"[serve] batch={args.batch} steps={args.steps}"
-          + (f" bulk={args.bulk}" if args.bulk else ""))
+          + (f" bulk={args.bulk}" if args.bulk else "")
+          + (f" qps={args.qps}" if args.qps else ""))
     print(engine.stats.format_table(skip_warmup=skip))
+    if open_loop is not None:
+        print(f"[serve] open loop: offered={open_loop['offered_qps']:.1f}qps "
+              f"goodput={open_loop['goodput_qps']:.1f}qps "
+              f"completed={open_loop['completed']} shed={open_loop['shed']}")
+        print(engine.rstats.format_table(skip_warmup=skip))
     counters = engine.counters()
     print(f"[serve] cell cache: compiles={counters['compiles']} "
           f"hits={counters['hits']} (warm process ⇒ zero recompiles)")
+    occ = counters["occupancy"]
+    if occ:
+        print("[serve] occupancy: " + " ".join(
+            f"{cell}={v['occupancy']:.2f}" for cell, v in occ.items()))
     if store is not None:
         c = store.counters()
         print(f"[serve] tiers: hit_rate={c['hit_rate']:.3f} "
@@ -175,6 +260,10 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump({"batch": args.batch, "steps": args.steps,
                        "cells": engine.summary(skip_warmup=skip),
+                       "requests": engine.request_summary(skip_warmup=skip),
+                       "open_loop": ({k: v for k, v in open_loop.items()
+                                      if k != "tickets"}
+                                     if open_loop is not None else None),
                        "cache": counters,
                        "tiers": (store.counters() if store is not None
                                  else None),

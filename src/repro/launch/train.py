@@ -43,10 +43,12 @@ def main():
                          "(repro.cache.PrefetchPipeline); loss-identical to "
                          "the synchronous loop")
     ap.add_argument("--mesh", default=None,
-                    help="'dp,mp' or 'auto': run the train step under "
-                         "shard_map on a (data, model) device mesh — batch "
-                         "data-parallel, embedding-table rows sharded over "
-                         "the model axis with row-shard-local grad updates "
+                    help="'dp,mp', 'pod,dp,mp' or 'auto': run the train step "
+                         "under shard_map on a (data, model) — or multi-pod "
+                         "(pod, data, model) — device mesh: batch "
+                         "data-parallel over the non-model axes, "
+                         "embedding-table rows sharded over the model axis "
+                         "with row-shard-local grad updates "
                          "(repro.dist.shard). Virtualize CPU devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--ckpt-dir", default=None)

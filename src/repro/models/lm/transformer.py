@@ -162,10 +162,8 @@ class LM:
                 k_att = new_ck.astype(_dt(cfg)) * new_ks.astype(_dt(cfg))
                 v_att = new_cv.astype(_dt(cfg)) * new_vs.astype(_dt(cfg))
             else:
-                new_ck = jax.lax.dynamic_update_slice_in_dim(
-                    cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
-                new_cv = jax.lax.dynamic_update_slice_in_dim(
-                    cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+                new_ck = LM._cache_write(cache_k, k, cache_len)
+                new_cv = LM._cache_write(cache_v, v, cache_len)
                 k_att, v_att = new_ck, new_cv
             attn = gqa_attention(q, k_att, v_att, n_heads=nh, n_kv_heads=nkv,
                                  causal=True, q_offset=cache_len,
@@ -193,6 +191,23 @@ class LM:
         return x + ff, aux, new_ck, new_cv, new_ks, new_vs
 
     @staticmethod
+    def _cache_write(cache, update, start):
+        """Write ``update`` (B, s, H, hd) into ``cache`` (B, T, H, hd) at
+        sequence offset ``start`` — a scalar (one shared length: the classic
+        decode batch) or a per-row ``(B,)`` vector (continuous batching:
+        every slot advances independently, lowered as a vmapped
+        dynamic-update-slice so each row still writes only its own slot)."""
+        start = jnp.asarray(start)
+        update = update.astype(cache.dtype)
+        if start.ndim == 0:
+            return jax.lax.dynamic_update_slice_in_dim(cache, update, start,
+                                                       axis=1)
+        return jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s,
+                                                                axis=0)
+        )(cache, update, start)
+
+    @staticmethod
     def _requant_cache(cache, scale, new_vals, cache_len):
         """Write ``new_vals`` into an int8 cache with running-absmax scales.
 
@@ -201,11 +216,17 @@ class LM:
         later writes it only grows (monotone max), and the already-stored
         codes are re-quantized onto the coarser grid so one scale stays valid
         for the whole cache. cache: (B, T, H, hd) int8; scale: (B, 1, H, 1).
+        ``cache_len`` may be per-row ``(B,)`` (continuous batching) — a slot
+        rejoining at length 0 then re-seeds its own scale outright while the
+        other rows keep their running maxima.
         """
         vals32 = new_vals.astype(jnp.float32)
         obs = jnp.maximum(
             jnp.max(jnp.abs(vals32), axis=(1, 3), keepdims=True) / 127.0, 1e-8)
-        new_scale = jnp.where(cache_len == 0, obs, jnp.maximum(scale, obs))
+        first = jnp.asarray(cache_len) == 0
+        if first.ndim:
+            first = first.reshape((-1, 1, 1, 1))
+        new_scale = jnp.where(first, obs, jnp.maximum(scale, obs))
 
         def _rewrite(c):  # scale grew: shrink stored codes onto the new grid
             return jnp.clip(jnp.round(c.astype(jnp.float32)
@@ -220,8 +241,7 @@ class LM:
         cache = jax.lax.cond(jnp.any(new_scale > scale), _rewrite,
                              lambda c: c, cache)
         q = jnp.clip(jnp.round(vals32 / new_scale), -127, 127).astype(jnp.int8)
-        return (jax.lax.dynamic_update_slice_in_dim(cache, q, cache_len,
-                                                    axis=1), new_scale)
+        return LM._cache_write(cache, q, cache_len), new_scale
 
     @staticmethod
     def _gather_fsdp_weights(p, cfg: LMConfig):
@@ -288,7 +308,9 @@ class LM:
                         ccfg, train=train, step=step).astype(_dt(cfg))
         if positions is None:
             offset = kv_caches["len"] if kv_caches is not None else 0
-            positions = offset + jnp.arange(tokens.shape[1])[None, :]
+            # scalar offset -> (1, S) as before; per-slot (B,) -> (B, S)
+            positions = (jnp.reshape(jnp.asarray(offset), (-1, 1))
+                         + jnp.arange(tokens.shape[1])[None, :])
 
         cache_len = kv_caches["len"] if kv_caches is not None else None
 
@@ -393,6 +415,22 @@ class LM:
         """One-token serving step. tokens: (B, 1)."""
         logits, _, new_caches = LM.apply(params, buffers, tokens, cfg,
                                          kv_caches=kv_caches)
+        return logits[:, -1], new_caches
+
+    @staticmethod
+    def decode_step_slotted(params, buffers, tokens, lens, kv_caches,
+                            cfg: LMConfig):
+        """One continuous-batching decode step: per-slot cache lengths.
+
+        ``tokens``: (B, 1); ``lens``: (B,) int32 — each cache slot's valid
+        length, owned by the scheduler (a freed slot rejoins at 0, which
+        re-seeds its int8 scale on the first write); ``kv_caches``:
+        {"k","v"[,"k_scale","v_scale"]} **without** the shared "len" entry.
+        Returns (logits (B, V), new_caches without "len")."""
+        caches = dict(kv_caches, len=lens)
+        logits, _, new_caches = LM.apply(params, buffers, tokens, cfg,
+                                         kv_caches=caches)
+        new_caches.pop("len")
         return logits[:, -1], new_caches
 
     @staticmethod

@@ -85,6 +85,10 @@ def gqa_attention(q, k, v, *, n_heads: int, n_kv_heads: int, causal: bool,
 
     Grouped-query: each of the Hq/Hkv query groups attends to one kv head.
     Softmax in fp32 regardless of input dtype.
+
+    ``q_offset`` / ``kv_valid_len`` may be scalars (one shared cache length,
+    the classic decode batch) or per-row ``(B,)`` vectors (continuous
+    batching: every cache slot holds a sequence at its own length).
     """
     b, s, hq, hd = q.shape
     t = k.shape[1]
@@ -96,16 +100,20 @@ def gqa_attention(q, k, v, *, n_heads: int, n_kv_heads: int, causal: bool,
     logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
 
+    # masks normalize to (B|1, S, T): scalar offsets/lengths reshape to the
+    # broadcasting (1, 1, 1), per-row (B,) vectors to (B, 1, 1)
     mask = None
     if causal:
-        q_pos = q_offset + jnp.arange(s)[:, None]
-        k_pos = jnp.arange(t)[None, :]
-        mask = k_pos <= q_pos                             # (S, T)
+        q_pos = (jnp.reshape(jnp.asarray(q_offset), (-1, 1, 1))
+                 + jnp.arange(s)[None, :, None])          # (B|1, S, 1)
+        k_pos = jnp.arange(t)[None, None, :]
+        mask = k_pos <= q_pos                             # (B|1, S, T)
     if kv_valid_len is not None:
-        valid = jnp.arange(t)[None, :] < kv_valid_len     # (1, T) or (S,T)
+        valid = (jnp.arange(t)[None, None, :]
+                 < jnp.reshape(jnp.asarray(kv_valid_len), (-1, 1, 1)))
         mask = valid if mask is None else (mask & valid)
     if mask is not None:
-        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     if attn_mask is not None:  # (B, S, T) extra mask (padding etc.)
         logits = jnp.where(attn_mask[:, None, None], logits, NEG_INF)
 

@@ -1,34 +1,46 @@
 """Packed-table serving subsystem (paper §4 deployment path).
 
-Three layers, composable bottom-up:
+The request-lifecycle stack, composable bottom-up:
 
-  ``cache``    — CellCache: compile-once memoization of serving executables
-                 keyed by (arch, shape, mesh signature), with explicit in/out
-                 shardings from ``repro.dist``.
-  ``batcher``  — RequestBatcher: buckets arbitrary request sizes onto the
-                 registered cell shapes (pad-to-shape + validity mask) and
-                 unpads results.
-  ``engine``   — Engine: ``score`` / ``retrieve`` / ``decode`` front-end with
-                 per-cell latency percentiles in the Figure-5
-                 lookup-vs-compute split.
+  ``cache``     — CellCache: compile-once memoization of serving executables
+                  keyed by (arch, shape, mesh signature), with explicit
+                  in/out shardings from ``repro.dist``.
+  ``batcher``   — RequestBatcher: buckets arbitrary request sizes onto the
+                  registered cell shapes (pad-to-shape + validity mask);
+                  ``pack`` coalesces many requests into shared chunks whose
+                  ``Span``s scatter outputs back per requester.
+  ``queue``     — AdmissionQueue: the bounded arrival edge — deadlines,
+                  reject-on-full shedding, arrival/dispatch timestamps.
+  ``scheduler`` — Scheduler: drains the queue into coalesced cell dispatches;
+                  ``DecodeSession`` runs continuous-batching LM decode over a
+                  slot-pooled persistent KV cache.
+  ``engine``    — Engine: ``submit``/``poll``/``drain`` lifecycle with
+                  ``score`` / ``retrieve`` / ``decode`` preserved as thin
+                  synchronous wrappers; per-cell latency percentiles in the
+                  Figure-5 lookup-vs-compute split + per-request queue-wait /
+                  assembly / compute breakdown.
 
 ``repro.serve.cells`` holds the serve-cell builders, shared with the dry-run
 harness in ``repro.launch.cells``. Tiered (hot/cold) serving builds on
 ``repro.cache``: ``Engine.register_tiered_model`` + ``Engine.score_tiered``
 gather hot rows device-locally and overlap cold-row fills with compute.
 """
-from repro.serve.batcher import Chunk, RequestBatcher
+from repro.serve.batcher import Chunk, RequestBatcher, Span
 from repro.serve.cache import CellCache, CellKey, CompiledCell, mesh_signature
-from repro.serve.cells import (ServeCellDef, lm_decode_cell, packed_lookup_cell,
+from repro.serve.cells import (ServeCellDef, lm_decode_cell,
+                               lm_decode_slotted_cell, packed_lookup_cell,
                                packed_score_cell, packed_score_step,
                                tiered_score_cell, two_tower_retrieval_cell)
 from repro.serve.engine import Engine
-from repro.serve.stats import LatencyStats
+from repro.serve.queue import AdmissionQueue, Request
+from repro.serve.scheduler import DecodeSession, Scheduler
+from repro.serve.stats import LatencyStats, RequestStats
 
 __all__ = [
     "CellCache", "CellKey", "CompiledCell", "mesh_signature",
-    "Chunk", "RequestBatcher", "LatencyStats",
+    "Chunk", "Span", "RequestBatcher", "LatencyStats", "RequestStats",
+    "AdmissionQueue", "Request", "Scheduler", "DecodeSession",
     "ServeCellDef", "packed_score_cell", "packed_score_step",
     "packed_lookup_cell", "tiered_score_cell", "two_tower_retrieval_cell",
-    "lm_decode_cell", "Engine",
+    "lm_decode_cell", "lm_decode_slotted_cell", "Engine",
 ]

@@ -253,6 +253,55 @@ def two_tower_retrieval_cell(model, cfg, params, state, buffers, *,
     )
 
 
+def lm_decode_slotted_cell(cfg, params, buffers, *, batch: int, max_len: int,
+                           kv_int8: bool = True, arch: str,
+                           shape: str = "decode_cb",
+                           dp=("data",)) -> ServeCellDef:
+    """Continuous-batching decode: per-slot cache lengths.
+
+    The compiled batch dim is a pool of ``batch`` KV-cache *slots*; each slot
+    holds one request's sequence at its own length. Request inputs are
+    ``(tokens (B, 1), lens (B,) int32, caches)`` where ``lens`` is the
+    scheduler-owned per-slot valid length (a recycled slot rejoins at 0,
+    which re-seeds its int8 scale on first write) and ``caches`` omits the
+    shared ``"len"`` entry of the classic decode cell. Requests join/leave
+    the running batch between steps without recompiling — the scheduler's
+    ``DecodeSession`` owns the slot free-list."""
+    from repro.models.lm import LM
+
+    def decode_step(p, tokens, lens, caches):
+        return LM.decode_step_slotted(p, buffers, tokens, lens, caches, cfg)
+
+    kv_dtype = jnp.int8 if kv_int8 else jnp.bfloat16
+
+    def make_caches():
+        caches = LM.make_kv_caches(cfg, batch, max_len, kv_dtype)
+        caches.pop("len")
+        return caches
+
+    caches_sds = jax.eval_shape(make_caches)
+    cache_ps = {k: v for k, v in
+                lm_kv_cache_pspecs(quantized=kv_int8).items() if k != "len"}
+    tok_ps = P(dp, None) if batch > 1 else P(None, None)
+    lens_ps = P(dp) if batch > 1 else P(None)
+    params_pspecs = lm_param_pspecs(params, cfg)
+
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="decode_slotted", batch=batch,
+        step_fn=decode_step,
+        bound=(params,),
+        bound_pspecs=(params_pspecs,),
+        request_specs=(_sds((batch, 1), jnp.int32), _sds((batch,), jnp.int32),
+                       caches_sds),
+        request_pspecs=(tok_ps, lens_ps, cache_ps),
+        out_pspecs=(tok_ps if batch > 1 else P(None, "model"), cache_ps),
+        meta={"kind": "decode_slotted", "batch": batch, "max_len": max_len,
+              "kv_int8": kv_int8},
+        static=cfg,
+        make_request_state=make_caches,
+    )
+
+
 def lm_decode_cell(cfg, params, buffers, *, batch: int, max_len: int,
                    kv_int8: bool = True, arch: str, shape: str = "decode",
                    dp=("data",)) -> ServeCellDef:

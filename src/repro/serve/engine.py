@@ -1,17 +1,29 @@
-"""The serving engine: warm compiled cells behind score/retrieve/decode.
+"""The serving engine: a submit/poll request lifecycle over compiled cells.
 
-Request flow for ``score``:
+Request flow for a scored request:
 
-  ids (n, F) ──plan──▶ chunks on registered shapes ──pad──▶ compiled cell
-  ──unpad──▶ probs (n,)
+  submit(ids) ──▶ AdmissionQueue (bounded; deadlines; shed-on-full)
+      ──▶ Scheduler.step: coalesce pending requests across callers onto the
+          registered cell shapes (one padded cell invocation serves many
+          requests; outputs scatter back per requester via Chunk.spans)
+      ──▶ poll(ticket) → probs (n,)
+
+``score`` / ``score_tiered`` / ``decode`` are preserved as thin synchronous
+wrappers (submit + drain + poll), so single-caller code and every pre-
+lifecycle test keep working bit-identically — a lone request packs onto
+exactly the chunks the old per-request planner chose. LM generation rides
+the scheduler's **continuous-batching** decode lane (``submit_decode``):
+sequences join/leave a persistent slot-pooled KV cache between steps.
 
 Every executable is compiled exactly once per (arch, shape, mesh) by the
 ``CellCache``; bound state (packed table, MLPs, towers) is device_put with
-its serving shardings at registration and reused across requests. Per-request
-wall-clock is recorded per cell, with a lookup-only companion executable
-timed alongside to report the paper's Figure-5 lookup-vs-compute latency
-split. Timings cover executable dispatch-to-ready (host→device transfer of
-the request ids is excluded, matching the Figure-5 protocol).
+its serving shardings at registration and reused across requests. Per-cell
+wall-clock is recorded with a lookup-only companion executable timed
+alongside to report the paper's Figure-5 lookup-vs-compute latency split,
+plus per-dispatch occupancy; per-request queue-wait / batch-assembly /
+compute land in ``RequestStats``. Timings cover executable dispatch-to-ready
+(host→device transfer of the request ids is excluded, matching the Figure-5
+protocol).
 """
 from __future__ import annotations
 
@@ -19,7 +31,6 @@ import time
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.mesh import host_mesh
@@ -27,7 +38,9 @@ from repro.serve.batcher import RequestBatcher
 from repro.serve.cache import CellCache, CompiledCell
 from repro.serve.cells import (ServeCellDef, packed_lookup_cell,
                                packed_score_cell, tiered_score_cell)
-from repro.serve.stats import LatencyStats
+from repro.serve.queue import DONE, SHED, AdmissionQueue
+from repro.serve.scheduler import Scheduler
+from repro.serve.stats import LatencyStats, RequestStats
 
 
 class RegisteredCell(NamedTuple):
@@ -61,10 +74,15 @@ class Engine:
     from several models can coexist, keyed by their ``arch`` identity.
     """
 
-    def __init__(self, mesh=None, cache: CellCache | None = None):
+    def __init__(self, mesh=None, cache: CellCache | None = None,
+                 queue_capacity: int = 1024):
         self.mesh = mesh if mesh is not None else host_mesh()
         self.cache = cache if cache is not None else CellCache(self.mesh)
         self.stats = LatencyStats()
+        self.rstats = RequestStats()
+        self.queue = AdmissionQueue(queue_capacity)
+        self.scheduler = Scheduler(self)
+        self._requests: dict[int, object] = {}          # ticket -> Request
         self._score: dict[str, RegisteredCell] = {}     # bucket name -> cell
         self._score_batcher = RequestBatcher()
         self._retrieve: dict[str, RegisteredCell] = {}  # arch -> cell
@@ -108,6 +126,8 @@ class Engine:
             self._retrieve[celldef.arch] = reg
         elif celldef.kind == "decode":
             self._decode[celldef.arch] = reg
+        elif celldef.kind == "decode_slotted":
+            self.scheduler.add_session(celldef.arch, reg)
         else:
             raise ValueError(f"unroutable cell kind {celldef.kind!r}")
         return reg
@@ -160,7 +180,7 @@ class Engine:
             self._tiered[shape] = TieredCell(reg, store, offsets)
             self._tiered_batcher.register(shape, rows)
 
-    # -- request paths ------------------------------------------------------
+    # -- request lifecycle: submit / poll / drain ---------------------------
 
     def _timed_call(self, reg: RegisteredCell, *request):
         t0 = time.perf_counter()
@@ -168,22 +188,105 @@ class Engine:
         jax.block_until_ready(out)
         return out, (time.perf_counter() - t0) * 1e3
 
-    def score(self, ids, *, return_logits: bool = False) -> np.ndarray:
-        """Score an (n, F) id batch; any n — the batcher pads/chunks onto the
-        registered cell shapes. Returns probabilities (or raw logits)."""
+    def submit(self, ids, *, kind: str = "score",
+               deadline_ms: float | None = None, now: float | None = None,
+               overlap: bool = True) -> int | None:
+        """Admit an (n, F) scoring request into the queue -> ticket, or None
+        when the bounded queue sheds it (reject-on-full; counted).
+
+        ``kind`` routes the request to a lane: ``"score"`` (packed cells) or
+        ``"tiered"`` (hot/cold store cells, where ``overlap`` controls the
+        one-chunk-ahead cold-fill staging) — decode requests go through
+        ``submit_decode``. ``now`` overrides the arrival timestamp for
+        open-loop replay; ``deadline_ms`` is relative to it — requests still
+        queued past their deadline are shed at drain."""
+        if kind not in ("score", "tiered"):
+            raise ValueError(
+                f"unroutable request kind {kind!r} (use 'score' or 'tiered'; "
+                f"LM generation goes through submit_decode)")
         ids = np.asarray(ids, np.int32)
-        out = np.empty((ids.shape[0],), np.float32)
-        for chunk, padded, _mask in self._score_batcher.split(ids):
-            reg = self._score[chunk.bucket]
-            x = jax.device_put(jnp.asarray(padded),
-                               reg.cell.in_shardings[len(reg.bound)])
-            y, total_ms = self._timed_call(reg, x)
-            lookup_ms = None
-            if reg.lookup is not None:
-                _, lookup_ms = self._timed_call(reg.lookup, x)
-            self.stats.record(reg.celldef.name, total_ms, lookup_ms)
-            out[chunk.start:chunk.start + chunk.n_valid] = \
-                np.asarray(y)[:chunk.n_valid]
+        req = self.queue.submit(
+            kind, ids, ids.shape[0],
+            now=time.perf_counter() if now is None else now,
+            deadline_ms=deadline_ms,
+            meta={"overlap": overlap} if kind == "tiered" else None)
+        if req is None:
+            self.rstats.record_shed(kind)
+            return None
+        self._requests[req.ticket] = req
+        return req.ticket
+
+    def submit_decode(self, prompt, max_new: int, *, arch: str | None = None,
+                      deadline_ms: float | None = None,
+                      now: float | None = None) -> int | None:
+        """Admit an LM generation request (prompt replay + ``max_new`` greedy
+        tokens) into the continuous-batching decode lane -> ticket, or None
+        when shed. Requires a registered ``lm_decode_slotted_cell``; the
+        sequence joins the running decode batch when a KV-cache slot frees
+        up, without recompiling or restarting the batch."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        session = self.scheduler._pick_session(arch)
+        if prompt.shape[0] + int(max_new) > session.max_len:
+            raise ValueError(
+                f"sequence of {prompt.shape[0]}+{int(max_new)} tokens exceeds "
+                f"the cell's max_len={session.max_len}")
+        req = self.queue.submit(
+            "decode", (prompt, int(max_new), arch), 1,
+            now=time.perf_counter() if now is None else now,
+            deadline_ms=deadline_ms)
+        if req is None:
+            self.rstats.record_shed("decode")
+            return None
+        self._requests[req.ticket] = req
+        return req.ticket
+
+    def poll(self, ticket: int):
+        """The completed result for ``ticket`` — scored requests return the
+        (n,) logits, decode requests the generated tokens — or None while the
+        request is still queued/in flight. Raises on a shed ticket.
+
+        A finished ticket is consumed by its poll (its record is dropped so a
+        long-running process doesn't accumulate per-request state); polling
+        it again raises KeyError."""
+        req = self._requests[ticket]
+        if req.status == SHED:
+            del self._requests[ticket]
+            raise RuntimeError(
+                f"request {ticket} was shed (deadline passed while queued)")
+        if req.status != DONE:
+            return None
+        del self._requests[ticket]
+        return req.result
+
+    def sched_step(self, *, now: float | None = None) -> float:
+        """Run one scheduling round (coalesce + dispatch each lane once; one
+        decode token per active session). ``now=None`` uses the wall clock;
+        an explicit ``now`` threads a virtual open-loop timeline through the
+        dispatch timestamps and returns the advanced cursor."""
+        return self.scheduler.step(now=now)
+
+    def drain(self, *, now: float | None = None) -> float:
+        """Scheduling rounds until the queue is empty and every decode
+        session is idle. Returns the final clock cursor."""
+        cursor = now
+        while self.scheduler.busy:
+            cursor = self.sched_step(now=cursor)
+        return cursor if cursor is not None else time.perf_counter()
+
+    # -- synchronous wrappers (submit + drain + poll) -----------------------
+
+    def score(self, ids, *, return_logits: bool = False) -> np.ndarray:
+        """Score an (n, F) id batch; any n — the scheduler packs it onto the
+        registered cell shapes. Returns probabilities (or raw logits).
+
+        Thin synchronous wrapper over the lifecycle: a lone request packs
+        onto exactly the chunks the per-request planner would choose, so
+        results are bit-identical to pre-lifecycle engines."""
+        ticket = self.submit(ids)
+        if ticket is None:
+            raise RuntimeError("request shed: admission queue full")
+        self.drain()
+        out = self.poll(ticket)
         return out if return_logits else _sigmoid(out)
 
     def score_tiered(self, ids, *, overlap: bool = True,
@@ -197,38 +300,11 @@ class Engine:
         ``overlap=False`` stages each fill synchronously right before its
         dispatch — the reference timing in ``BENCH_prefetch.json``. Results
         are identical either way (the pipeline only moves bytes earlier)."""
-        ids = np.asarray(ids, np.int32)
-        out = np.empty((ids.shape[0],), np.float32)
-        chunks = list(self._tiered_batcher.split(ids))
-
-        def stage(k):
-            chunk, padded, mask = chunks[k]
-            tc = self._tiered[chunk.bucket]
-            # mask out batcher padding: pad rows fetch no cold bytes and
-            # stay out of the hit/byte counters (their outputs are dropped
-            # at unpad, so a zero fill is as good as a real one)
-            fill = tc.store.prefetch_cold(padded + tc.offsets[None, :],
-                                          valid=mask)
-            x = jax.device_put(jnp.asarray(padded),
-                               tc.reg.cell.in_shardings[len(tc.reg.bound)])
-            return tc, x, fill
-
-        staged = stage(0) if overlap else None
-        for k, (chunk, _padded, _mask) in enumerate(chunks):
-            tc, x, fill = staged if overlap else stage(k)
-            t0 = time.perf_counter()
-            cold = tc.store.cold_part(fill).reshape(
-                x.shape[0], x.shape[1], -1)                    # (B, F, d)
-            cold = jax.device_put(
-                cold, tc.reg.cell.in_shardings[len(tc.reg.bound) + 1])
-            y = tc.reg.cell.compiled(*tc.reg.bound, x, cold)   # async dispatch
-            if overlap and k + 1 < len(chunks):
-                staged = stage(k + 1)   # host gather + H2D under y's compute
-            jax.block_until_ready(y)
-            self.stats.record(tc.reg.celldef.name,
-                              (time.perf_counter() - t0) * 1e3)
-            out[chunk.start:chunk.start + chunk.n_valid] = \
-                np.asarray(y)[:chunk.n_valid]
+        ticket = self.submit(ids, kind="tiered", overlap=overlap)
+        if ticket is None:
+            raise RuntimeError("request shed: admission queue full")
+        self.drain()
+        out = self.poll(ticket)
         return out if return_logits else _sigmoid(out)
 
     def tier_counters(self) -> dict:
@@ -245,16 +321,16 @@ class Engine:
         reg = self._pick(self._retrieve, arch, "retrieval")
         cap = reg.celldef.batch
         top_k = reg.celldef.meta["top_k"]
-        user = jax.device_put(jnp.asarray(np.asarray(user_ids, np.int32)),
+        user = jax.device_put(np.asarray(user_ids, np.int32),
                               reg.cell.in_shardings[len(reg.bound)])
         cand_ids = np.asarray(cand_ids, np.int32)
         all_scores, all_idx = [], []
         for start in range(0, cand_ids.shape[0], cap):
             part = cand_ids[start:start + cap]
             padded, mask = RequestBatcher.pad(part, cap)
-            c = jax.device_put(jnp.asarray(padded),
+            c = jax.device_put(padded,
                                reg.cell.in_shardings[len(reg.bound) + 1])
-            m = jax.device_put(jnp.asarray(mask),
+            m = jax.device_put(mask,
                                reg.cell.in_shardings[len(reg.bound) + 2])
             (scores, idx), total_ms = self._timed_call(reg, user, c, m)
             self.stats.record(reg.celldef.name, total_ms)
@@ -276,7 +352,7 @@ class Engine:
         tokens = np.asarray(tokens, np.int32)
         b = tokens.shape[0]
         padded, _ = RequestBatcher.pad(tokens, cap)
-        toks = jax.device_put(jnp.asarray(padded),
+        toks = jax.device_put(padded,
                               reg.cell.in_shardings[len(reg.bound)])
         if caches is None:
             caches = self.fresh_caches(arch=reg.celldef.arch)
@@ -318,7 +394,20 @@ class Engine:
         return self._score_batcher.shapes
 
     def counters(self) -> dict:
-        return self.cache.counters()
+        """Cell-cache counters plus per-cell occupancy (valid rows / padded
+        rows over every dispatch — the coalescing win) and the admission
+        queue's depth/shed counters."""
+        out = dict(self.cache.counters())
+        out["occupancy"] = self.stats.occupancy()
+        out["queue"] = self.queue.counters()
+        return out
 
     def summary(self, *, skip_warmup: int = 0) -> dict:
+        """Per-cell latency percentiles (Figure-5 lookup/compute split) with
+        per-cell ``occupancy`` merged in where dispatches recorded it."""
         return self.stats.summary(skip_warmup=skip_warmup)
+
+    def request_summary(self, *, skip_warmup: int = 0) -> dict:
+        """Per-kind request breakdown: end-to-end latency plus the three-way
+        queue-wait / batch-assembly / compute split."""
+        return self.rstats.summary(skip_warmup=skip_warmup)

@@ -1,0 +1,127 @@
+"""Admission queue: the arrival edge of the request lifecycle.
+
+Serving decouples *arrival* from *dispatch*: callers ``submit`` requests into
+a bounded queue and the scheduler (``repro.serve.scheduler``) drains it into
+coalesced cell-shaped batches. The queue owns the admission policy:
+
+  - **backpressure** — the queue is bounded (``capacity`` requests); a full
+    queue *sheds* new arrivals (reject-on-full, counted in ``shed_full``)
+    instead of growing without bound — the open-loop overload behaviour the
+    Figure-5-style latency split needs to stay measurable;
+  - **deadlines** — a request may carry a deadline; requests still queued
+    past it are shed at drain time (``shed_deadline``) rather than burning
+    cell capacity on answers nobody is waiting for;
+  - **timestamps** — arrival, dispatch and completion times are recorded per
+    request, so queue-wait is separable from batch-assembly and compute in
+    the latency breakdown (``repro.serve.stats.RequestStats``).
+
+Timestamps are driven by the caller-provided ``now`` (the engine passes
+``time.perf_counter()``; the open-loop replay in ``launch/serve.py`` passes a
+virtual timeline), so the same queue serves live traffic and deterministic
+offline replay.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+# request lifecycle states
+QUEUED = "queued"
+DISPATCHED = "dispatched"   # at least one chunk dispatched, results pending
+DONE = "done"
+SHED = "shed"
+
+
+class Request:
+    """One submitted request and its lifecycle record."""
+    __slots__ = ("ticket", "kind", "payload", "meta", "n_rows", "arrival_t",
+                 "deadline_t", "dispatch_t", "complete_t", "status", "result",
+                 "rows_done", "queue_ms", "assembly_ms", "compute_ms")
+
+    def __init__(self, ticket: int, kind: str, payload, n_rows: int,
+                 arrival_t: float, deadline_t: float | None, meta=None):
+        self.ticket = ticket
+        self.kind = kind
+        self.payload = payload
+        self.meta = meta
+        self.n_rows = int(n_rows)
+        self.arrival_t = float(arrival_t)
+        self.deadline_t = deadline_t
+        self.dispatch_t = None
+        self.complete_t = None
+        self.status = QUEUED
+        self.result = None
+        self.rows_done = 0
+        self.queue_ms = None
+        self.assembly_ms = 0.0
+        self.compute_ms = 0.0
+
+    @property
+    def latency_ms(self) -> float | None:
+        if self.complete_t is None:
+            return None
+        return (self.complete_t - self.arrival_t) * 1e3
+
+
+class AdmissionQueue:
+    """Bounded FIFO of admitted requests with shed counters.
+
+    The queue never dispatches anything itself — the scheduler calls
+    ``take`` to drain one kind's pending requests (shedding the expired ones
+    on the way out). All counters are cumulative over the queue's life.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._pending: deque[Request] = deque()
+        self._next_ticket = 0
+        self.admitted = 0
+        self.shed_full = 0
+        self.shed_deadline = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, kind: str, payload, n_rows: int, *, now: float,
+               deadline_ms: float | None = None, meta=None) -> Request | None:
+        """Admit a request, or shed it (returns None) when the queue is full.
+
+        ``now`` is the arrival timestamp on the caller's clock; a relative
+        ``deadline_ms`` becomes an absolute deadline on the same clock."""
+        if len(self._pending) >= self.capacity:
+            self.shed_full += 1
+            return None
+        deadline_t = None if deadline_ms is None else now + deadline_ms / 1e3
+        req = Request(self._next_ticket, kind, payload, n_rows, now,
+                      deadline_t, meta=meta)
+        self._next_ticket += 1
+        self._pending.append(req)
+        self.admitted += 1
+        return req
+
+    def take(self, kind: str, *, now: float) -> tuple[list, list]:
+        """Drain the pending requests of ``kind`` in FIFO order ->
+        (ready, expired). Requests whose deadline passed while they queued
+        are shed (status ``SHED``, counted) instead of dispatched; other
+        kinds stay queued untouched."""
+        ready, expired, keep = [], [], deque()
+        while self._pending:
+            req = self._pending.popleft()
+            if req.kind != kind:
+                keep.append(req)
+                continue
+            if req.deadline_t is not None and now > req.deadline_t:
+                req.status = SHED
+                req.complete_t = now
+                self.shed_deadline += 1
+                expired.append(req)
+                continue
+            ready.append(req)
+        self._pending = keep
+        return ready, expired
+
+    def counters(self) -> dict:
+        return {"capacity": self.capacity, "depth": len(self._pending),
+                "admitted": self.admitted, "shed_full": self.shed_full,
+                "shed_deadline": self.shed_deadline}

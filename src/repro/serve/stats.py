@@ -1,14 +1,31 @@
-"""Per-cell serving latency accounting.
+"""Per-cell and per-request serving latency accounting.
 
-Follows the paper's Figure-5 protocol: end-to-end request latency is split
-into *table lookup* (packed gather + unpack + dequant) and *computation*
-(interaction network / towers / decode). The engine measures the lookup slice
-with a dedicated lookup-only executable per cell (same padded shape, same
-table shardings), so the split survives recompiles and shape changes.
+Two views of the same traffic:
+
+  - ``LatencyStats`` (per **cell** dispatch) follows the paper's Figure-5
+    protocol: end-to-end dispatch latency split into *table lookup* (packed
+    gather + unpack + dequant, timed via a lookup-only companion executable
+    at the same padded shape) and *computation*. It also accumulates per-cell
+    **occupancy** — valid rows over padded capacity — so the coalescing win
+    of the scheduler is measurable per dispatch.
+  - ``RequestStats`` (per **request**) extends the split upstream of the
+    cell: *queue wait* (arrival → first dispatch), *batch assembly* (span
+    gather + pad + host→device transfer) and *compute* (cell dispatch to
+    ready), plus the end-to-end latency on the caller's clock.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def _pcts(values, *, skip_warmup: int = 0) -> dict:
+    arr = np.asarray(values, np.float64)
+    if arr.shape[0] > skip_warmup:
+        arr = arr[skip_warmup:]
+    return {"count": int(len(values)),
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "mean_ms": float(arr.mean())}
 
 
 class LatencyStats:
@@ -17,11 +34,25 @@ class LatencyStats:
     def __init__(self):
         self._total_ms: dict[str, list] = {}
         self._lookup_ms: dict[str, list] = {}
+        self._occupancy: dict[str, list] = {}   # [valid_rows, padded_rows]
 
-    def record(self, cell: str, total_ms: float, lookup_ms: float | None = None):
+    def record(self, cell: str, total_ms: float, lookup_ms: float | None = None,
+               *, valid_rows: int | None = None,
+               capacity_rows: int | None = None):
         self._total_ms.setdefault(cell, []).append(float(total_ms))
         if lookup_ms is not None:
             self._lookup_ms.setdefault(cell, []).append(float(lookup_ms))
+        if valid_rows is not None and capacity_rows is not None:
+            acc = self._occupancy.setdefault(cell, [0, 0])
+            acc[0] += int(valid_rows)
+            acc[1] += int(capacity_rows)
+
+    def occupancy(self) -> dict:
+        """Per-cell {valid_rows, padded_rows, occupancy} over every recorded
+        dispatch — the fraction of compiled rows that carried real work."""
+        return {cell: {"valid_rows": v, "padded_rows": p,
+                       "occupancy": (v / p) if p else 0.0}
+                for cell, (v, p) in sorted(self._occupancy.items())}
 
     def cells(self):
         return sorted(self._total_ms)
@@ -49,6 +80,9 @@ class LatencyStats:
             lookup_p50 = float(np.percentile(lk, 50))
             out["lookup_p50_ms"] = lookup_p50
             out["compute_p50_ms"] = max(out["p50_ms"] - lookup_p50, 0.0)
+        occ = self._occupancy.get(cell)
+        if occ is not None and occ[1]:
+            out["occupancy"] = occ[0] / occ[1]
         return out
 
     def summary(self, *, skip_warmup: int = 0) -> dict:
@@ -63,5 +97,66 @@ class LatencyStats:
             if "lookup_p50_ms" in s:
                 line += (f" lookup={s['lookup_p50_ms']:.2f}ms "
                          f"compute={s['compute_p50_ms']:.2f}ms")
+            if "occupancy" in s:
+                line += f" occ={s['occupancy']:.2f}"
             lines.append(line)
+        return "\n".join(lines)
+
+
+class RequestStats:
+    """Per-request three-way latency breakdown, grouped by request kind.
+
+    One record per completed request: *queue wait* (arrival → first chunk
+    dispatch), *batch assembly* (span gather + pad + ``device_put``, summed
+    over the request's chunks), *compute* (cell dispatch-to-ready, summed)
+    and the end-to-end latency on the caller's clock. Shed requests are
+    counted, not timed (they never reach a cell)."""
+
+    def __init__(self):
+        self._records: dict[str, dict[str, list]] = {}
+        self.shed = 0
+
+    def record(self, kind: str, *, queue_ms: float, assembly_ms: float,
+               compute_ms: float, latency_ms: float):
+        rec = self._records.setdefault(
+            kind, {"queue_ms": [], "assembly_ms": [], "compute_ms": [],
+                   "latency_ms": []})
+        rec["queue_ms"].append(float(queue_ms))
+        rec["assembly_ms"].append(float(assembly_ms))
+        rec["compute_ms"].append(float(compute_ms))
+        rec["latency_ms"].append(float(latency_ms))
+
+    def record_shed(self, kind: str):
+        del kind
+        self.shed += 1
+
+    def kinds(self):
+        return sorted(self._records)
+
+    def summary(self, *, skip_warmup: int = 0) -> dict:
+        """{kind: {latency: pcts, queue_ms: pcts, assembly_ms: pcts,
+        compute_ms: pcts}} — the three-way split + end-to-end."""
+        out = {}
+        for kind, rec in sorted(self._records.items()):
+            out[kind] = {
+                "count": len(rec["latency_ms"]),
+                "latency": _pcts(rec["latency_ms"], skip_warmup=skip_warmup),
+                "queue": _pcts(rec["queue_ms"], skip_warmup=skip_warmup),
+                "assembly": _pcts(rec["assembly_ms"], skip_warmup=skip_warmup),
+                "compute": _pcts(rec["compute_ms"], skip_warmup=skip_warmup),
+            }
+        return out
+
+    def format_table(self, *, skip_warmup: int = 0) -> str:
+        lines = []
+        for kind, s in self.summary(skip_warmup=skip_warmup).items():
+            lines.append(
+                f"{kind:<12} n={s['count']:<5} "
+                f"e2e p50={s['latency']['p50_ms']:.2f}ms "
+                f"p99={s['latency']['p99_ms']:.2f}ms | "
+                f"queue={s['queue']['p50_ms']:.2f}ms "
+                f"assembly={s['assembly']['p50_ms']:.2f}ms "
+                f"compute={s['compute']['p50_ms']:.2f}ms")
+        if self.shed:
+            lines.append(f"shed={self.shed}")
         return "\n".join(lines)

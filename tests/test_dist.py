@@ -219,3 +219,73 @@ def test_four_device_round_trip_subprocess():
                           text=True, timeout=300)
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "4-device dist round-trip OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# three-axis ("pod", "data", "model") mesh — the multi-pod CLI layout.
+# parse_mesh_flag accepts 'pod,dp,mp'; the shard wrappers are axis-generic,
+# so the sharded lookup must stay bit-exact on the 1x2x2 mesh too.
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_flag_rejects_garbage():
+    from repro.dist.mesh import parse_mesh_flag
+    assert parse_mesh_flag(None) is None
+    assert parse_mesh_flag("") is None
+    for bad in ("2", "2,2,2,2", "a,b", "2;2"):
+        with pytest.raises(SystemExit):
+            parse_mesh_flag(bad)
+
+
+def _pod_mesh_checks():
+    """1x2x2 ("pod", "data", "model") mesh drive — shared by the in-process
+    ``multidevice`` test and the single-device subprocess fallback."""
+    import numpy as np
+    from repro.core.inference import build_packed_table, packed_lookup
+    from repro.core.mpe import MPEConfig
+    from repro.dist import shard
+    from repro.dist.mesh import parse_mesh_flag
+
+    assert jax.device_count() >= 4, jax.devices()
+    mesh = parse_mesh_flag("1,2,2")
+    assert mesh.axis_names == ("pod", "data", "model")
+    assert mesh.devices.shape == (1, 2, 2)
+
+    rng = __import__("numpy").random.default_rng(0)
+    cfg = MPEConfig()
+    emb = rng.normal(size=(160, 12)).astype(np.float32)
+    fbits = rng.integers(0, len(cfg.bits), size=160).astype(np.int32)
+    alpha = (np.abs(rng.normal(size=len(cfg.bits))) * 0.1 + 0.01).astype(
+        np.float32)
+    beta = (rng.normal(size=12) * 0.01).astype(np.float32)
+    table, meta = build_packed_table(emb, fbits, alpha, beta, cfg)
+    ids = jnp.asarray(rng.integers(0, meta["n"], size=(24, 3)), jnp.int32)
+    ref = np.asarray(jax.jit(lambda t, i: packed_lookup(t, meta, i))(table,
+                                                                     ids))
+    with use_mesh(mesh):
+        # batch axes of the pod mesh are every non-"model" axis
+        assert current_dp_axes() == ("pod", "data")
+        got = jax.jit(lambda t, i: shard.sharded_packed_lookup(t, meta, i))(
+            table, ids)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+@pytest.mark.multidevice
+def test_pod_mesh_in_process():
+    _pod_mesh_checks()
+
+
+_POD_FALLBACK_SCRIPT = """
+import test_dist
+test_dist._pod_mesh_checks()
+print("1x2x2 pod-mesh drive OK")
+"""
+
+
+def test_pod_mesh_subprocess():
+    if jax.device_count() >= 4:
+        pytest.skip("in-process multidevice test covers this session")
+    proc = subprocess.run([sys.executable, "-c", _POD_FALLBACK_SCRIPT],
+                          env=subprocess_env_4dev(), capture_output=True,
+                          text=True, timeout=300)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "1x2x2 pod-mesh drive OK" in proc.stdout

@@ -56,6 +56,43 @@ def test_nested_scan_multiplies():
     assert abs(f - expected) / expected < 0.10
 
 
+def test_cond_branch_modes_order_and_flops():
+    """lax.cond branch accounting: "sum" charges both branches (conservative
+    static bound), "max" only the heavy one, "min" only the light one — the
+    common write-one-slot decode branch of the kv_int8 cells."""
+    d = 128
+
+    def heavy(x):
+        return x @ x  # a dot only the heavy branch runs
+
+    def light(x):
+        return x
+
+    def f(pred, x):
+        return jax.lax.cond(pred, heavy, light, x).sum()
+
+    hlo = _compile(f, jax.ShapeDtypeStruct((), jnp.bool_),
+                   jax.ShapeDtypeStruct((d, d), jnp.float32))
+    res = {m: analyze(hlo, cond_mode=m) for m in ("sum", "max", "min")}
+    b = {m: r["hbm_bytes_per_device"] for m, r in res.items()}
+    fl = {m: r["flops_per_device"] for m, r in res.items()}
+    # the heavy branch's dot is charged under sum and max, never under min
+    dot_flops = 2 * d ** 3
+    assert fl["sum"] >= dot_flops and fl["max"] >= dot_flops
+    assert fl["min"] < dot_flops
+    # bytes ordering follows the branch selection
+    assert b["sum"] >= b["max"] > b["min"]
+    for m, r in res.items():
+        assert r["cond_mode"] == m
+
+
+def test_cond_mode_rejects_unknown():
+    import pytest
+    hlo = _compile(lambda x: x * 2, jax.ShapeDtypeStruct((4,), jnp.float32))
+    with pytest.raises(ValueError):
+        analyze(hlo, cond_mode="median")
+
+
 def test_normalize_cost_handles_every_cost_analysis_shape():
     """jax 0.4.x cost_analysis() returns [dict] (or [] on sharded shard_map
     modules XLA declines to cost); newer jax returns the dict. The dryrun and
