@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Static contract checker CLI — the blocking ``staticcheck`` CI gate.
+
+Runs ``repro.analysis`` over the repo: AST lint (RL4xx) plus the
+trace-level passes (PF/SC/RC/BC) over the tiny standard cell corpus,
+compiled on a virtual 2x2 mesh so the shard_map and collective paths are
+exercised without accelerators.
+
+Exit codes: 0 clean, 1 findings, 2 internal error.
+
+Usage:
+    python scripts/staticcheck.py                 # the whole gate
+    python scripts/staticcheck.py --lint-only     # AST rules only (fast)
+    python scripts/staticcheck.py --trace-only    # jaxpr/HLO passes only
+    python scripts/staticcheck.py --select PF,SC2 # filter by code prefix
+    python scripts/staticcheck.py --update-budgets  # refresh budgets.json
+    python scripts/staticcheck.py --devices 1     # skip the virtual mesh
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _force_devices(n: int) -> None:
+    # must land before jax (transitively) imports — keep this ahead of any
+    # repro.analysis import
+    if n > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--lint-only", action="store_true",
+                    help="AST rules only; no jax import, no tracing")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="jaxpr/HLO passes only; skip the AST lint")
+    ap.add_argument("--select", default=None, metavar="PREFIXES",
+                    help="comma-separated rule-code prefixes to keep "
+                         "(e.g. 'PF,SC2')")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="rewrite src/repro/analysis/budgets.json from "
+                         "measured collective bytes (+25%% headroom) "
+                         "instead of gating on it")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="virtual CPU device count for the corpus mesh "
+                         "(default 4 -> 2x2; 1 skips the flag)")
+    args = ap.parse_args(argv)
+
+    if args.lint_only:
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        from repro.analysis.lint import lint_tree
+        findings = lint_tree(REPO_ROOT)
+        for f in findings:
+            print(f.render())
+        print(f"{len(findings)} lint finding(s)")
+        return 1 if findings else 0
+
+    _force_devices(args.devices)
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    import repro.analysis as A
+    from repro.analysis.budgets import budget_entry, save_budgets
+
+    report = A.run(REPO_ROOT, lint=not args.trace_only)
+
+    if args.update_budgets:
+        budgets = {name: budget_entry(measured)
+                   for name, measured in sorted(report.measured.items())}
+        save_budgets(budgets)
+        # stale BC findings were gated on the old file; drop them
+        report.findings = [f for f in report.findings
+                           if not f.code.startswith("BC")]
+        print(f"budgets.json updated: {len(budgets)} cell(s)")
+
+    if args.select:
+        prefixes = tuple(p.strip() for p in args.select.split(",")
+                         if p.strip())
+        report.findings = [f for f in report.findings
+                           if f.code.startswith(prefixes)]
+
+    print(report.render())
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        sys.exit(2)

@@ -3,11 +3,26 @@
 # smoke so import-graph breakage (a module importing a symbol that doesn't
 # exist yet) fails fast instead of hiding behind collection errors.
 #
-# Usage: scripts/verify.sh [extra pytest args...]
+# Usage: scripts/verify.sh [--static] [extra pytest args...]
+#   --static   additionally run the static contract gate
+#              (scripts/staticcheck.py — the blocking `staticcheck` CI job)
+#              before the test suite, so the whole gate is reproducible
+#              locally with one command.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+RUN_STATIC=0
+if [[ "${1:-}" == "--static" ]]; then
+  RUN_STATIC=1
+  shift
+fi
+
+if [[ "$RUN_STATIC" == "1" ]]; then
+  echo "== staticcheck (repro.analysis contract gate) =="
+  python scripts/staticcheck.py
+fi
 
 echo "== collection smoke (zero import errors required) =="
 python -m pytest --collect-only -q >/dev/null

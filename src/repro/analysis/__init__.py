@@ -1,0 +1,37 @@
+"""repro.analysis — static contract checker for the serving stack.
+
+Four trace-level passes walk the jaxprs and compiled HLO of registered
+serving cells (no real devices needed), plus an AST lint over
+``src/repro``, all reported ruff-style with stable rule codes:
+
+==========  ============================================================
+ PF1xx       precision flow (``.precision``): float64 leaks, dequants
+             outside the sanctioned modules, packed words into float
+             math, int8 wraparound arithmetic
+ SC2xx       sharding contract (``.shardspec``): specs vs the
+             ``dist.sharding`` mesh contract; the shard_map
+             bucket-merge (psum) invariant
+ RC3xx       recompile hazards (``.recompile``): weak types, unstable
+             fingerprints, cache-key collisions, trace nondeterminism
+ BC5xx       collective budgets (``.budgets``): per-cell cross-device
+             bytes vs checked-in ``budgets.json``
+ RL4xx       source lint (``.lint``): hand-rolled PartitionSpecs,
+             shard_map outside ``dist/``, host syncs in the serve hot
+             path, device-path float64 literals, nondeterminism in
+             cell-definition modules
+==========  ============================================================
+
+Entry points: ``run`` (the whole gate — what
+``scripts/staticcheck.py`` and the blocking CI job call), or the
+per-pass ``check_*`` functions for targeted use. Inline suppression:
+``# staticcheck: ignore[PF102]`` on the offending line.
+"""
+from repro.analysis.findings import (Finding, PragmaIndex,
+                                     filter_suppressed, parse_pragmas)
+from repro.analysis.runner import (Report, check_cell, check_engine,
+                                   lint_tree, run)
+
+__all__ = [
+    "Finding", "PragmaIndex", "Report", "check_cell", "check_engine",
+    "filter_suppressed", "lint_tree", "parse_pragmas", "run",
+]

@@ -1,0 +1,80 @@
+"""Collective-budget pass (BC5xx): per-cell collective bytes stay bounded.
+
+Cross-device bytes are the serving path's scarcest resource — the whole
+point of the masked-psum lookup layout is that a score cell moves one
+``all-reduce`` of the (batch, d) output and nothing else. A refactor that
+accidentally all-gathers a subtable (or lets GSPMD insert resharding
+collectives) can be numerically perfect and still blow the latency budget,
+so the measured per-cell collective bytes are checked in and gated:
+
+  BC501  a cell's per-device collective bytes (from
+         ``launch.hlo_analysis.analyze`` over its compiled HLO — the same
+         accounting ``roofline.py --collectives`` reports) exceed its
+         checked-in budget.
+  BC502  a cell has no budget entry — new cells must check in a budget
+         (run ``scripts/staticcheck.py --update-budgets``).
+
+Budgets live in ``src/repro/analysis/budgets.json`` with ~25% headroom
+over the measured bytes at budget-update time, absorbing jax/XLA version
+drift in lowering while still catching a layout regression (any stray
+table gather is orders of magnitude over).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.findings import Finding
+from repro.launch.hlo_analysis import analyze
+
+BUDGETS_PATH = os.path.join(os.path.dirname(__file__), "budgets.json")
+
+#: headroom multiplier applied by ``--update-budgets``.
+HEADROOM = 1.25
+
+
+def measure_collectives(compiled) -> dict:
+    """Per-kind collective bytes of one AOT-compiled executable."""
+    return analyze(compiled.as_text())["collectives_per_device"]
+
+
+def load_budgets(path: str | None = None) -> dict:
+    path = path or BUDGETS_PATH
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError:
+        return {}
+
+
+def save_budgets(budgets: dict, path: str | None = None) -> None:
+    path = path or BUDGETS_PATH
+    with open(path, "w") as f:
+        json.dump(budgets, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def budget_entry(measured: dict) -> dict:
+    """A fresh budget line: measured total bytes with headroom."""
+    return {"total_bytes": int(measured["total_bytes"] * HEADROOM)}
+
+
+def check_budget(name: str, measured: dict,
+                 budgets: dict) -> list[Finding]:
+    """BC501/BC502 for one cell's measured collectives."""
+    entry = budgets.get(name)
+    if entry is None:
+        return [Finding(
+            "BC502", f"no collective budget checked in for this cell — run "
+            f"scripts/staticcheck.py --update-budgets and commit "
+            f"budgets.json", name)]
+    total = float(measured["total_bytes"])
+    cap = float(entry["total_bytes"])
+    if total > cap:
+        kinds = {k: int(v["bytes"]) for k, v in measured.items()
+                 if isinstance(v, dict) and v.get("bytes")}
+        return [Finding(
+            "BC501", f"collective bytes {int(total)} exceed the checked-in "
+            f"budget {int(cap)} (per-kind: {kinds}) — a layout change is "
+            f"moving extra cross-device bytes", name)]
+    return []

@@ -1,0 +1,199 @@
+"""Source-level lint (RL4xx): repo conventions enforced mechanically.
+
+AST-based (no regexes over code), ruff-style output, scoped to
+``src/repro``. These rules encode conventions ARCHITECTURE.md previously
+stated as prose:
+
+  RL401  a ``PartitionSpec``/``P`` call with a **string-literal mesh axis**
+         outside ``repro/dist/`` — naming an axis inline is declaring
+         placement policy, which belongs to the pspec families in
+         ``dist/sharding.py``. Two shapes stay legal: axis-less literals
+         (``P(None)``, ``P(dp, None)`` — wiring contract-derived tuples
+         through) and literals passed *directly* to ``maybe_shard``/
+         ``shard_batch_dim`` (those route through ``_fit_spec``, which
+         validates axes against the active mesh).
+  RL402  ``shard_map`` imported or called outside ``repro/dist/shard.py``
+         — every shard_map body must live behind the wrappers whose in/out
+         specs come from the contract (and which SC204 can audit).
+  RL403  ``jax.device_get`` / ``block_until_ready`` in ``repro/serve/`` —
+         host syncs in the hot path serialize the dispatch pipeline. The
+         two deliberate timing barriers carry
+         ``# staticcheck: ignore[RL403]``.
+  RL404  a device-path ``float64`` dtype literal (``jnp.float64`` /
+         ``jnp.double``) — doubles are never intentional on the TPU path
+         (PF101 is the trace-level twin). Host-side ``np.float64`` stays
+         legal: the Zipf/statistics code uses it deliberately.
+  RL405  nondeterminism in a cell-definition module (``serve/cells.py``,
+         ``launch/cells.py``): ``time.*``/``random.*``/``np.random.*``/
+         ``datetime.*`` — a cell closure must trace identically every
+         process, or the compile cache forks (RC304 is the trace-level
+         twin).
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding, parse_pragmas
+
+RULES = ("RL401", "RL402", "RL403", "RL404", "RL405")
+
+_PSPEC_NAMES = {"P", "PartitionSpec"}
+_SHARD_WRAPPERS = {"maybe_shard", "shard_batch_dim"}
+_CELL_MODULES = ("serve/cells.py", "launch/cells.py")
+_NONDET_ROOTS = {"time", "random", "datetime"}
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _in_dist(path: str) -> bool:
+    return "/dist/" in _norm(path) or _norm(path).endswith("/dist")
+
+
+def _in_serve(path: str) -> bool:
+    return "repro/serve/" in _norm(path)
+
+
+def _is_cell_module(path: str) -> bool:
+    return any(_norm(path).endswith(m) for m in _CELL_MODULES)
+
+
+def _call_name(node: ast.Call) -> str | None:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _dotted_root(node) -> str | None:
+    """Leftmost name of a dotted expression (``np.random.default_rng`` ->
+    ``np``; second segment via _dotted_second)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _has_axis_literal(call: ast.Call) -> bool:
+    """Does a P(...) call name a mesh axis as a string literal (directly or
+    inside a tuple literal)?"""
+    for arg in call.args:
+        entries = arg.elts if isinstance(arg, ast.Tuple) else (arg,)
+        for e in entries:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.findings: list[Finding] = []
+        self._wrapper_args: set[int] = set()  # ids of maybe_shard arg nodes
+
+    def _flag(self, code: str, node, message: str):
+        self.findings.append(Finding(
+            code, message, self.relpath, file=self.relpath,
+            line=node.lineno, col=node.col_offset + 1))
+
+    # -- RL402: imports ----------------------------------------------------
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        names = {a.name for a in node.names}
+        if "shard_map" in names and not _in_dist(self.relpath):
+            self._flag("RL402", node,
+                       "shard_map import outside dist/shard.py — use the "
+                       "sharded_* wrappers")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        name = _call_name(node)
+
+        if name in _SHARD_WRAPPERS:
+            for arg in node.args:
+                if isinstance(arg, ast.Call) and \
+                        _call_name(arg) in _PSPEC_NAMES:
+                    self._wrapper_args.add(id(arg))
+
+        if name in _PSPEC_NAMES and not _in_dist(self.relpath) \
+                and id(node) not in self._wrapper_args \
+                and _has_axis_literal(node):
+            self._flag("RL401", node,
+                       "hand-rolled PartitionSpec with a string-literal "
+                       "mesh axis — use a pspec family from "
+                       "dist/sharding.py (or pass it directly to "
+                       "maybe_shard)")
+
+        if name == "shard_map" and not _in_dist(self.relpath):
+            self._flag("RL402", node,
+                       "shard_map call outside dist/shard.py — use the "
+                       "sharded_* wrappers")
+
+        if name in ("device_get", "block_until_ready") \
+                and _in_serve(self.relpath):
+            self._flag("RL403", node,
+                       f"{name} in the serve hot path — host syncs "
+                       f"serialize the dispatch pipeline")
+
+        if _is_cell_module(self.relpath):
+            root = _dotted_root(node.func)
+            attr = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else None
+            if root in _NONDET_ROOTS or (root == "np" and attr is not None
+                                         and "random" in ast.dump(node.func)):
+                self._flag("RL405", node,
+                           f"nondeterministic call in a cell-definition "
+                           f"module ({root}.{attr or name}) — cell closures "
+                           f"must trace identically every process")
+
+        self.generic_visit(node)
+
+    # -- RL404: device-path float64 literals -------------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in ("float64", "double") and \
+                _dotted_root(node) in ("jnp", "jax"):
+            self._flag("RL404", node,
+                       f"device-path float64 dtype literal (jnp."
+                       f"{node.attr}) — double precision is never "
+                       f"intentional on the TPU path")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str) -> list[Finding]:
+    """Lint one module's source text; pragma suppression applied."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("RL400", f"syntax error: {e.msg}", relpath,
+                        file=relpath, line=e.lineno or 1)]
+    visitor = _Visitor(relpath)
+    visitor.visit(tree)
+    pragmas = parse_pragmas(source)
+    out = []
+    for f in visitor.findings:
+        codes = pragmas.get(f.line, ())
+        if codes is None or f.code in codes:
+            continue
+        out.append(f)
+    return out
+
+
+def lint_file(path: str, root: str | None = None) -> list[Finding]:
+    rel = os.path.relpath(path, root) if root else path
+    with open(path) as f:
+        return lint_source(f.read(), _norm(rel))
+
+
+def lint_tree(src_root: str) -> list[Finding]:
+    """Lint every ``.py`` under ``src_root`` (pass the repo root; scope is
+    ``src/repro``)."""
+    target = os.path.join(src_root, "src", "repro")
+    findings = []
+    for dirpath, _, files in os.walk(target):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                findings += lint_file(os.path.join(dirpath, fn),
+                                      root=src_root)
+    return findings

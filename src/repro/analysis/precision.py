@@ -1,0 +1,106 @@
+"""Precision-flow pass (PF1xx): dtype-lattice checks over traced cells.
+
+The paper's contribution is that precision is a *per-feature-group
+property* — packed codes live at their assigned widths until the one
+sanctioned dequant. These rules catch the ways that discipline silently
+erodes (each was a real runtime bug class in this repo's history: the int8
+KV absmax bug, the FMA dequant subtlety):
+
+  PF101  an op produces a float64/complex128 value — double precision is
+         never intentional on the TPU path (and doubles every byte the
+         roofline model budgets).
+  PF102  a narrow quantized dtype is converted to float outside the
+         sanctioned dequant modules (``core/packing.py``,
+         ``core/quantizer.py``). Narrow = int8/int16/uint8/uint16 always;
+         in cells marked *packed* it widens to int32/uint32 too, because
+         unpacked codes travel as int32 there (int32 index/label converts
+         in unpacked cells stay legal).
+  PF103  a uint32 value is converted to float — packed *words* leaking
+         into float math decodes garbage regardless of call site; only
+         ``unpack_codes`` may consume packed words.
+  PF104  integer arithmetic on int8 operands (add/sub/mul/dot staying in
+         int8) — overflows at ±127 with wraparound; quantized arithmetic
+         must widen (or dequant) first.
+
+Attribution is by the equation's innermost user frame: routing a dequant
+through ``core.quantizer.dequantize_codes`` moves the convert's frame into
+the sanctioned module, which is exactly what "sanctioned call site" means
+mechanically. Frames outside the repo (jax internals) are treated as
+sanctioned — library-internal converts (e.g. ``jnp.mean`` accumulators)
+are not ours to flag.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_walk import in_dtypes, out_dtypes, walk
+
+#: modules whose frames may widen quantized codes to float.
+SANCTIONED_DEQUANT = ("repro/core/quantizer.py", "repro/core/packing.py")
+
+_NARROW_INTS = ("int8", "uint8", "int16", "uint16")
+_PACKED_EXTRA = ("int32", "uint32")
+_ARITH_PRIMS = frozenset({"add", "sub", "mul", "dot_general"})
+
+
+def _is_float(dt) -> bool:
+    return jnp.issubdtype(dt, jnp.floating)
+
+
+def _sanctioned(file: str | None) -> bool:
+    if file is None:
+        return True           # no user frame: jax-internal, not ours
+    if "repro/" not in file.replace("\\", "/"):
+        return True           # outside the repo source tree
+    return any(file.replace("\\", "/").endswith(s)
+               for s in SANCTIONED_DEQUANT)
+
+
+def check_precision(closed_jaxpr, where: str, *,
+                    packed: bool = False) -> list[Finding]:
+    """Run PF101–PF104 over one traced cell/kernel jaxpr.
+
+    ``packed`` marks cells serving from packed/quantized tables: their
+    int32-carried codes join the narrow set for PF102 (see module doc)."""
+    findings = []
+    narrow = _NARROW_INTS + (_PACKED_EXTRA if packed else ())
+    for item in walk(closed_jaxpr):
+        eqn = item.eqn
+        name = eqn.primitive.name
+
+        for dt in out_dtypes(eqn):
+            if str(dt) in ("float64", "complex128"):
+                findings.append(Finding(
+                    "PF101", f"op '{name}' produces {dt} — double precision "
+                    f"is never intentional on this path",
+                    where, file=item.file, line=item.line))
+                break
+
+        if name == "convert_element_type":
+            src = in_dtypes(eqn)
+            dst = eqn.params.get("new_dtype")
+            if src and dst is not None and _is_float(dst):
+                s = str(src[0])
+                if s == "uint32":
+                    findings.append(Finding(
+                        "PF103", f"uint32 -> {dst} convert: packed words "
+                        f"must go through core.packing.unpack_codes, never "
+                        f"into float math",
+                        where, file=item.file, line=item.line))
+                elif s in narrow and not _sanctioned(item.file):
+                    findings.append(Finding(
+                        "PF102", f"{s} -> {dst} convert outside the "
+                        f"sanctioned dequant modules "
+                        f"({', '.join(SANCTIONED_DEQUANT)}) — route through "
+                        f"core.quantizer",
+                        where, file=item.file, line=item.line))
+
+        if name in _ARITH_PRIMS:
+            dts = out_dtypes(eqn)
+            if dts and str(dts[0]) == "int8":
+                findings.append(Finding(
+                    "PF104", f"int8 '{name}' — 8-bit arithmetic wraps at "
+                    f"±127; widen (or dequantize) before computing",
+                    where, file=item.file, line=item.line))
+    return findings

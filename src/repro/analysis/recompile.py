@@ -1,0 +1,95 @@
+"""Recompile-hazard pass (RC3xx): keep serving zero-recompile.
+
+The serving path's contract is *compile once per (arch, shape, mesh)*:
+``CellCache`` keys executables by ``(arch, shape@batch#fingerprint,
+mesh_sig)`` and ``tests/test_serve.py`` asserts a warm process performs
+zero recompiles. These rules catch the ways a cell definition breaks that
+statically, by diffing the cache key's ingredients against the
+traced-abstract-value signature (``ServeCellDef.abstract_signature``):
+
+  RC301  a weak-typed input leaf — a Python scalar closed into ``bound``
+         (or a weak constant) traces as ``weak_type=True``, which jax
+         re-specializes against strongly-typed arrays: the first real
+         request re-traces the "warm" executable.
+  RC302  the fingerprint blob contains a ``0x…`` object address — some
+         ``static`` ingredient falls back to the default ``__repr__``, so
+         the same registration fingerprints differently every process
+         (warm-start caches can never hit) and two *different* configs can
+         collide after an address reuse.
+  RC303  two cell definitions produce the same cache key but different
+         abstract signatures — the key under-identifies the executable;
+         whichever registers second silently warm-hits the wrong one.
+  RC304  tracing the cell twice yields different jaxprs — Python-level
+         nondeterminism in the step closure (dict-order dependence, RNG,
+         time) forks the compile cache between traces.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.findings import Finding
+
+_ADDR = re.compile(r"0x[0-9a-fA-F]{6,}")
+
+
+def check_fingerprint(celldef) -> list[Finding]:
+    """RC301/RC302 over one cell definition."""
+    findings = []
+    blob = celldef.fingerprint_blob
+    m = _ADDR.search(blob)
+    if m:
+        findings.append(Finding(
+            "RC302", f"fingerprint blob contains object address {m.group(0)}"
+            f" (default __repr__ of a static/meta ingredient) — the "
+            f"fingerprint changes every process; give the object a stable "
+            f"repr", celldef.name))
+    for i, (shape, dtype, weak) in enumerate(celldef.abstract_signature()):
+        if weak:
+            findings.append(Finding(
+                "RC301", f"input leaf #{i} ({dtype}{list(shape)}) is "
+                f"weak-typed — a Python scalar closed into the cell; the "
+                f"first strongly-typed request re-traces. Wrap it in "
+                f"jnp.asarray(..., dtype=...) at build time",
+                celldef.name))
+    return findings
+
+
+def _key_of(celldef) -> tuple:
+    # mirror Engine._compile / CellCache.key, minus the mesh (same for all
+    # cells under one engine, so it can't disambiguate colliding defs)
+    return (celldef.arch,
+            f"{celldef.shape}@{celldef.batch}#{celldef.fingerprint}")
+
+
+def check_key_collisions(celldefs) -> list[Finding]:
+    """RC303 across a set of cell definitions."""
+    findings = []
+    seen: dict[tuple, tuple] = {}
+    for cd in celldefs:
+        key = _key_of(cd)
+        sig = cd.abstract_signature()
+        prev = seen.setdefault(key, sig)
+        if prev != sig:
+            findings.append(Finding(
+                "RC303", f"cache key {key[1]!r} collides across cell "
+                f"definitions with different abstract signatures — the "
+                f"second registration warm-hits an executable compiled for "
+                f"other avals", cd.name))
+    return findings
+
+
+def check_trace_determinism(celldef, make_jaxpr) -> list[Finding]:
+    """RC304: trace twice, compare jaxpr text. ``make_jaxpr()`` builds the
+    cell's ClosedJaxpr (the runner owns mesh/context plumbing). It must
+    defeat ``jax.make_jaxpr``'s identity-keyed trace cache — wrap the step
+    in a fresh closure per call, as ``corpus.trace_cell`` does — or both
+    traces return the same cached jaxpr and the check is vacuous."""
+    # printed jaxprs embed object addresses (custom_jvp thunks etc.) that
+    # legitimately differ between traces — scrub before comparing
+    a, b = (_ADDR.sub("0xADDR", str(make_jaxpr())) for _ in range(2))
+    if a != b:
+        return [Finding(
+            "RC304", "tracing the step function twice produced different "
+            "jaxprs — nondeterministic Python in the cell closure forks "
+            "the compile cache", celldef.name)]
+    return []

@@ -1,0 +1,124 @@
+"""Orchestrates the static-analysis passes into one report.
+
+Two independent halves, composable for the CLI (``scripts/staticcheck.py``)
+and the tests:
+
+* ``check_engine(engine)`` — the trace-level passes over every cell an
+  engine has registered: precision flow (PF1xx), sharding contract
+  (SC2xx), recompile hazards (RC3xx), collective budgets (BC5xx). No
+  real devices needed beyond what the engine compiled on.
+* ``lint_tree(repo_root)`` (re-exported from ``.lint``) — the AST rules
+  (RL4xx) over ``src/repro``.
+
+``run(repo_root)`` is the whole gate: build the tiny standard corpus
+(``.corpus``), run both halves, return findings sorted by rule code.
+Findings carrying a file/line honor ``# staticcheck: ignore[...]``
+pragmas at that line (trace-level findings attribute to the *user frame*
+of the offending equation, so the pragma goes where the op is written).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.analysis.budgets import (check_budget, load_budgets,
+                                    measure_collectives)
+from repro.analysis.corpus import (budget_name, build_corpus, is_packed,
+                                   trace_cell)
+from repro.analysis.findings import Finding, PragmaIndex
+from repro.analysis.lint import lint_tree
+from repro.analysis.precision import check_precision
+from repro.analysis.recompile import (check_fingerprint,
+                                      check_key_collisions,
+                                      check_trace_determinism)
+from repro.analysis.shardspec import (check_celldef_specs,
+                                      check_shard_map_reductions)
+
+
+@dataclass
+class Report:
+    """One static-analysis run: findings plus the per-cell collective
+    measurements (kept so ``--update-budgets`` reuses them instead of
+    re-measuring)."""
+    findings: list = field(default_factory=list)
+    measured: dict = field(default_factory=dict)   # budget name -> bytes
+    n_cells: int = 0
+
+    @property
+    def codes(self) -> set:
+        return {f.code for f in self.findings}
+
+    def render(self) -> str:
+        lines = [f.render() for f in
+                 sorted(self.findings, key=lambda f: (f.code, f.where))]
+        lines.append(f"{len(self.findings)} finding(s) across "
+                     f"{self.n_cells} cell(s)")
+        return "\n".join(lines)
+
+
+def check_cell(reg, mesh, *, budgets=None, report: Report | None = None,
+               skip_budgets: bool = False) -> Report:
+    """Every trace-level pass over one ``RegisteredCell``."""
+    report = report if report is not None else Report()
+    celldef = reg.celldef
+    jaxpr = trace_cell(reg, mesh)
+
+    report.findings += check_precision(jaxpr, celldef.name,
+                                       packed=is_packed(celldef))
+    report.findings += check_shard_map_reductions(jaxpr, celldef.name)
+    report.findings += check_celldef_specs(celldef)
+    report.findings += check_fingerprint(celldef)
+    report.findings += check_trace_determinism(
+        celldef, lambda: trace_cell(reg, mesh))
+
+    if not skip_budgets:
+        name = budget_name(reg.cell.key)
+        measured = measure_collectives(reg.cell.compiled)
+        report.measured[name] = measured
+        report.findings += check_budget(name, measured,
+                                        budgets if budgets is not None
+                                        else {})
+    report.n_cells += 1
+    return report
+
+
+def check_engine(engine, *, budgets=None,
+                 skip_budgets: bool = False) -> Report:
+    """All trace-level passes over every cell ``engine`` registered."""
+    report = Report()
+    cells = engine.registered_cells()
+    for reg in cells.values():
+        check_cell(reg, engine.mesh, budgets=budgets, report=report,
+                   skip_budgets=skip_budgets)
+    report.findings += check_key_collisions(
+        [reg.celldef for reg in cells.values()])
+    return report
+
+
+def run(repo_root: str, *, mesh=None, lint: bool = True,
+        trace: bool = True, budgets: dict | None = None) -> Report:
+    """The whole gate: corpus + trace passes + source lint.
+
+    ``budgets`` defaults to the checked-in ``budgets.json``.
+    """
+    report = Report()
+    if trace:
+        engine = build_corpus(mesh)
+        report = check_engine(
+            engine, budgets=budgets if budgets is not None
+            else load_budgets())
+    if lint:
+        report.findings += lint_tree(repo_root)
+
+    # trace-level findings with a file/line honor source pragmas too
+    # (lint findings were already filtered in lint_source; re-checking is
+    # idempotent — their relative paths resolve against the cwd, and the
+    # trace findings carry absolute user-frame paths)
+    pragmas = PragmaIndex()
+    report.findings = [f for f in report.findings
+                       if not pragmas.suppressed(f)]
+    report.findings.sort(key=lambda f: (f.code, f.where, f.line or 0))
+    return report
+
+
+__all__ = ["Report", "check_cell", "check_engine", "lint_tree", "run",
+           "Finding"]

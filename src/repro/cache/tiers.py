@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import packing
 from repro.core.inference import _pad_rows, _auto_pad_multiple
-from repro.core.quantizer import int_bounds
+from repro.core.quantizer import dequantize_codes, int_bounds
 from repro.embeddings.frequency import hot_feature_mask
 
 
@@ -230,8 +230,8 @@ class TieredTableStore:
             codes_grid, wgrid = _scatter_codes(bits[i], d, codes_grid, wgrid,
                                                jnp.asarray(pos), words, i)
         alpha_vec = jnp.take(self.hot["alpha"], jnp.maximum(wgrid, 0), axis=0)
-        deq = alpha_vec[:, None] * codes_grid.astype(jnp.float32) \
-            + self.hot["beta"]
+        deq = dequantize_codes(codes_grid, alpha_vec[:, None],
+                               self.hot["beta"])
         return jnp.where((wgrid >= 0)[:, None], deq, 0.0)
 
     # -- full lookup --------------------------------------------------------
@@ -287,7 +287,7 @@ def tiered_hot_lookup(hot, bits, d: int, ids: jnp.ndarray) -> jnp.ndarray:
         sub = hot["subtables"][f"b{b}"]
         words = jnp.take(sub, jnp.clip(lidx, 0, sub.shape[0] - 1), axis=0)
         codes = packing.unpack_codes(words, b, d)
-        deq = hot["alpha"][i] * codes.astype(jnp.float32) + hot["beta"]
+        deq = dequantize_codes(codes, hot["alpha"][i], hot["beta"])
         out = jnp.where((is_hot & (widx == i))[:, None], deq, out)
     return out.reshape(*ids.shape, d)
 

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core import packing
 from repro.core.mpe import MPEConfig
-from repro.core.quantizer import int_bounds, quantize_codes
+from repro.core.quantizer import (dequantize_codes, int_bounds,
+                                  quantize_codes)
 
 
 def _pad_rows(n: int, multiple: int) -> int:
@@ -98,7 +99,7 @@ def packed_lookup(table, meta, ids: jnp.ndarray) -> jnp.ndarray:
         sub = table["subtables"][f"b{b}"]
         words = jnp.take(sub, jnp.clip(lidx, 0, sub.shape[0] - 1), axis=0)
         codes = packing.unpack_codes(words, b, d)               # (B, d)
-        deq = table["alpha"][i] * codes.astype(jnp.float32) + table["beta"]
+        deq = dequantize_codes(codes, table["alpha"][i], table["beta"])
         out = jnp.where((widx == i)[:, None], deq, out)
     return out.reshape(*ids.shape, d)
 

@@ -96,6 +96,45 @@ def dequantize_codes(codes: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray) 
     return alpha * codes.astype(jnp.float32) + beta
 
 
+# ---------------------------------------------------------------------------
+# symmetric int8 helpers (KV caches, expert weights)
+#
+# These are the *sanctioned* narrow→wide conversion sites: the staticcheck
+# precision-flow pass (repro.analysis.precision) attributes every
+# convert-out-of-a-narrow-int to its source module and only this module and
+# core/packing.py may widen quantized codes. Routing a dequant through here
+# is what marks it audited — the expressions are kept to the exact op order
+# of the call sites they replaced, so lowering stays bit-identical.
+# ---------------------------------------------------------------------------
+
+def dequantize_symmetric(q: jnp.ndarray, scale: jnp.ndarray,
+                         dtype=jnp.float32) -> jnp.ndarray:
+    """Symmetric (zero-offset) dequant: ``q * scale`` in ``dtype``.
+
+    Both factors are cast *before* the multiply (``q.astype(dtype) *
+    scale.astype(dtype)``) — the order the int8 KV-cache attention reads and
+    the MoE expert matmuls always used; changing it would move the rounding
+    point and break the bit-exactness tests."""
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def quantize_symmetric(vals: jnp.ndarray, scale: jnp.ndarray,
+                       dtype=jnp.int8) -> jnp.ndarray:
+    """Symmetric quant onto the int8 grid: round(vals/scale) clipped to
+    ±127. ``vals`` should already be fp32 (callers hold the absmax
+    calibration; this is only the grid projection)."""
+    return jnp.clip(jnp.round(vals / scale), -127, 127).astype(dtype)
+
+
+def requantize_int8(codes: jnp.ndarray, ratio: jnp.ndarray) -> jnp.ndarray:
+    """Re-project stored int8 codes onto a coarser grid: ``round(codes *
+    ratio)`` clipped to ±127, with ``ratio = old_scale / new_scale`` ≤ 1.
+    The running-absmax KV cache uses this when a scale grows
+    (``LM._requant_cache``)."""
+    return jnp.clip(jnp.round(codes.astype(jnp.float32) * ratio),
+                    -127, 127).astype(jnp.int8)
+
+
 def init_alpha(std: float, b: int) -> float:
     """LSQ-style step-size init: alpha ≈ 2·E|θ| / sqrt(P_b) with θ~N(0,std)."""
     if b < 1:

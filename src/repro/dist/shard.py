@@ -60,6 +60,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import packing
+from repro.core.quantizer import dequantize_codes
 from repro.dist.mesh import current_mesh
 from repro.dist.sharding import replicate_like
 
@@ -147,7 +148,7 @@ def _bucket_dequant(sub, loc, alpha_i, beta, *, b, d, use_kernel, interpret):
                                     interpret=interpret)
     words = jnp.take(sub, loc, axis=0)
     codes = packing.unpack_codes(words, b, d)
-    return alpha_i * codes.astype(jnp.float32) + beta
+    return dequantize_codes(codes, alpha_i, beta)
 
 
 def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
@@ -243,7 +244,7 @@ def sharded_tiered_hot_lookup(hot, bits, d: int, ids, *,
             own = (loc >= 0) & (loc < rows_loc) & hot_bit
             words = jnp.take(sub, jnp.clip(loc, 0, rows_loc - 1), axis=0)
             codes = packing.unpack_codes(words, b, d)
-            deq = alpha[i] * codes.astype(jnp.float32) + beta
+            deq = dequantize_codes(codes, alpha[i], beta)
             out = jnp.where((own & (widx == i))[:, None], deq, out)
         return jax.lax.psum(out, rows_ax) if rows_ax else out
 

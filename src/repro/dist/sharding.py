@@ -33,6 +33,58 @@ from repro.dist.mesh import current_mesh
 # pspec valid on any submesh (1×1 test mesh included).
 PROD_AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
 
+# ---------------------------------------------------------------------------
+# machine-readable spec contract (read by repro.analysis.shardspec)
+# ---------------------------------------------------------------------------
+
+#: Every mesh axis any pspec family may name. A spec entry naming an axis
+#: outside this set can never resolve on a production mesh (SC201).
+MESH_AXES = frozenset(PROD_AXIS_SIZE)
+
+#: The axis *groups* a single pspec dim may combine, normalized to tuples in
+#: mesh order. ``("pod", "data")`` is the multi-pod batch dim;
+#: ``("data", "model")`` / ("pod","data","model") are the every-axis row
+#: splits of ``sharded_mixed_expectation``; singletons are the common case.
+#: A dim entry outside this family is out of contract (SC202) — e.g.
+#: ``("model", "data")`` (wrong order ⇒ wrong row-major shard index) or an
+#: ad-hoc axis pairing no wrapper produces.
+AXIS_GROUPS = frozenset({
+    ("pod",), ("data",), ("model",),
+    ("pod", "data"), ("data", "model"), ("pod", "data", "model"),
+})
+
+#: name → builder for every pspec family below; ``repro.analysis`` resolves
+#: cell/wrapper specs against this registry (a spec is in contract when each
+#: of its dim entries normalizes into AXIS_GROUPS — the families themselves
+#: only ever emit such entries).
+SPEC_FAMILIES = {}
+
+
+def _family(fn):
+    SPEC_FAMILIES[fn.__name__] = fn
+    return fn
+
+
+def normalize_entry(entry) -> tuple[str, ...] | None:
+    """One PartitionSpec dim entry → tuple-of-axes (None stays None).
+
+    ``P("data")`` and ``P(("data",))`` are the same placement; the analysis
+    passes compare normalized entries against ``AXIS_GROUPS``."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def spec_in_contract(spec) -> bool:
+    """True when every dim entry of ``spec`` is a registered axis group."""
+    for entry in tuple(spec):
+        norm = normalize_entry(entry)
+        if norm is not None and norm not in AXIS_GROUPS:
+            return False
+    return True
+
 
 def dp_axes(multi_pod: bool = False) -> tuple[str, ...]:
     """The data-parallel (batch) axes of the production mesh."""
@@ -141,6 +193,7 @@ def _fsdp_leaf_spec(leaf) -> P:
     return P(*entries)
 
 
+@_family
 def lm_param_pspecs(params_sds, cfg=None):
     """Pspecs matching the LM param tree (stacked-layer leaves included).
 
@@ -153,12 +206,32 @@ def lm_param_pspecs(params_sds, cfg=None):
     return jax.tree.map(_fsdp_leaf_spec, params_sds)
 
 
+@_family
+def lm_logits_pspecs(batch: int, *, vocab_sharded: bool = False, dp=None,
+                     multi_pod: bool = False) -> P:
+    """Logits ``(B, V)`` of a prefill/decode step.
+
+    Batched steps shard the batch over the data axes (``dp`` overrides the
+    production ``dp_axes`` for cells compiled against a custom data tuple)
+    with the vocab dim optionally over "model" (prefill keeps it sharded —
+    the ``lm_head`` matmul output layout); a ``batch == 1`` step has nothing
+    to split on the data axes, so the vocab dim takes "model" instead. The
+    serve/launch decode cells previously hand-rolled this split at four call
+    sites — staticcheck SC202 now pins them here."""
+    if batch > 1:
+        axes = tuple(dp) if dp is not None else dp_axes(multi_pod)
+        return P(axes, "model" if vocab_sharded else None)
+    return P(None, "model")
+
+
+@_family
 def lm_batch_pspecs(multi_pod: bool = False):
     """{"tokens", "labels"}: (B, S) int32, batch over the data axes."""
     dp = dp_axes(multi_pod)
     return {"tokens": P(dp, None), "labels": P(dp, None)}
 
 
+@_family
 def lm_cache_pspecs(*, long_context: bool = False, multi_pod: bool = False):
     """Stacked KV caches {"k","v": (L, B, T, n_kv, hd), "len": ()}.
 
@@ -170,6 +243,7 @@ def lm_cache_pspecs(*, long_context: bool = False, multi_pod: bool = False):
     return {"k": kv, "v": kv, "len": P()}
 
 
+@_family
 def lm_kv_cache_pspecs(*, quantized: bool = False, long_context: bool = False,
                        multi_pod: bool = False):
     """``lm_cache_pspecs`` plus the int8 per-(layer, batch, head) scale
@@ -188,6 +262,7 @@ def lm_kv_cache_pspecs(*, quantized: bool = False, long_context: bool = False,
 # recsys embedding tables (search/train phase)
 # ---------------------------------------------------------------------------
 
+@_family
 def recsys_table_pspecs(rows_axes, emb_sds=None):
     """MPE search-phase embedding params: the (n, d) table row-shards over
     ``rows_axes``; γ is (n/group_size, m) — not generally mesh-divisible and
@@ -207,6 +282,7 @@ def recsys_table_pspecs(rows_axes, emb_sds=None):
 # MPE packed serving tables
 # ---------------------------------------------------------------------------
 
+@_family
 def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
     """Pspecs for a packed inference table (core/inference.py layout).
 
@@ -228,6 +304,7 @@ def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
     }
 
 
+@_family
 def tiered_hot_pspecs(hot_sds, *, rows_axes=("model",)):
     """Pspecs for the **hot tier** of a ``repro.cache.TieredTableStore``.
 
@@ -249,6 +326,7 @@ def tiered_hot_pspecs(hot_sds, *, rows_axes=("model",)):
     }
 
 
+@_family
 def packed_serve_pspecs(params, *, rows_axes=("model",),
                         row_keys=("wide", "fm_linear")):
     """Full param-tree pspecs for a model serving from a packed table.

@@ -4,10 +4,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.quantizer import dequantize_codes
 
 
 def packed_lookup_ref(ids: jnp.ndarray, words: jnp.ndarray, alpha, beta, *,
                       b: int, d: int) -> jnp.ndarray:
     rows = jnp.take(words, ids, axis=0)               # (B, W)
     codes = packing.unpack_codes(rows, b, d)          # (B, d)
-    return alpha * codes.astype(jnp.float32) + beta
+    return dequantize_codes(codes, alpha, beta)

@@ -28,8 +28,9 @@ from repro.core.inference import packed_specs
 from repro.core.mpe import MPEConfig
 from repro.data.graphs import NeighborSampler
 from repro.dist.sharding import (dp_axes, lm_batch_pspecs, lm_kv_cache_pspecs,
-                                 lm_param_pspecs, packed_serve_pspecs,
-                                 recsys_table_pspecs, replicate_like)
+                                 lm_logits_pspecs, lm_param_pspecs,
+                                 packed_serve_pspecs, recsys_table_pspecs,
+                                 replicate_like)
 from repro.models.bst import BST
 from repro.models.dlrm import DLRM
 from repro.models.gnn import GIN
@@ -143,7 +144,8 @@ def build_lm_cell(arch_id: str, shape: str, multi_pod: bool,
             name=f"{arch_id}/{shape}", step_fn=prefill_step,
             input_specs=(params_sds, tokens_sds),
             in_pspecs=(p_pspecs, P(dp, None)),
-            out_pspecs=(P(dp, "model"), cache_ps),
+            out_pspecs=(lm_logits_pspecs(sd["batch"], vocab_sharded=True,
+                                         dp=dp), cache_ps),
             meta={"kind": "prefill", "tokens": sd["batch"] * sd["seq"],
                   "family": "lm"},
         )
@@ -159,8 +161,7 @@ def build_lm_cell(arch_id: str, shape: str, multi_pod: bool,
         name=f"{arch_id}/{shape}", step_fn=decode_step,
         input_specs=(params_sds, tokens_sds, caches_sds),
         in_pspecs=(p_pspecs, tok_batch_ps, cache_ps),
-        out_pspecs=((tok_batch_ps if sd["batch"] > 1 else P(None, "model")),
-                    cache_ps),
+        out_pspecs=(lm_logits_pspecs(sd["batch"], dp=dp), cache_ps),
         meta={"kind": "decode", "tokens": sd["batch"], "family": "lm",
               "kv_len": sd["seq"]},
     )

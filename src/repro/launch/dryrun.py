@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 Proves the distribution config is coherent without hardware: a successful
@@ -13,6 +10,9 @@ Usage:
     python -m repro.launch.dryrun --arch wide-deep --shape train_batch
     python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import sys

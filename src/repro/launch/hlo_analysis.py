@@ -232,7 +232,7 @@ def _collect_facts(comps: dict) -> dict:
 
     # mark fusion bodies (reached via calls= from fusion ops) — their ops are
     # VMEM-internal; bytes counted at the call site instead.
-    for name, lines in comps.items():
+    for lines in comps.values():
         for line in lines:
             m = _OP.match(line)
             if m and m.group(3) == "fusion":

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import get_compressor
+from repro.core.quantizer import (dequantize_symmetric, quantize_symmetric,
+                                  requantize_int8)
 from repro.nn import init as initializers
 from repro.nn.attention import MHA, gqa_attention
 from repro.nn.moe import MoE, MoEConfig
@@ -159,8 +161,8 @@ class LM:
                                                    cache_len)
                 new_cv, new_vs = LM._requant_cache(cache_v, cache_v_scale, v,
                                                    cache_len)
-                k_att = new_ck.astype(_dt(cfg)) * new_ks.astype(_dt(cfg))
-                v_att = new_cv.astype(_dt(cfg)) * new_vs.astype(_dt(cfg))
+                k_att = dequantize_symmetric(new_ck, new_ks, _dt(cfg))
+                v_att = dequantize_symmetric(new_cv, new_vs, _dt(cfg))
             else:
                 new_ck = LM._cache_write(cache_k, k, cache_len)
                 new_cv = LM._cache_write(cache_v, v, cache_len)
@@ -229,9 +231,7 @@ class LM:
         new_scale = jnp.where(first, obs, jnp.maximum(scale, obs))
 
         def _rewrite(c):  # scale grew: shrink stored codes onto the new grid
-            return jnp.clip(jnp.round(c.astype(jnp.float32)
-                                      * (scale / new_scale)),
-                            -127, 127).astype(jnp.int8)
+            return requantize_int8(c, scale / new_scale)
 
         # The full-cache rewrite is the rare path — scales only grow, mostly
         # during the first writes. The common decode step must stay
@@ -240,7 +240,7 @@ class LM:
         # seed scale happens only on an all-zero cache: nothing to rewrite.)
         cache = jax.lax.cond(jnp.any(new_scale > scale), _rewrite,
                              lambda c: c, cache)
-        q = jnp.clip(jnp.round(vals32 / new_scale), -127, 127).astype(jnp.int8)
+        q = quantize_symmetric(vals32, new_scale)
         return LM._cache_write(cache, q, cache_len), new_scale
 
     @staticmethod

@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantizer import dequantize_symmetric
 from repro.nn import init as initializers
 
 
@@ -125,7 +126,7 @@ class MoE:
 
         def _mat(m):  # dequantize int8 expert weights on use
             if isinstance(m, dict):
-                return (m["q"].astype(xe.dtype) * m["scale"].astype(xe.dtype))
+                return dequantize_symmetric(m["q"], m["scale"], xe.dtype)
             return m
 
         h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, _mat(w["w_gate"])))

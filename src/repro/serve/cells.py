@@ -24,9 +24,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.cache.tiers import tiered_hot_lookup_fn
 from repro.core.inference import packed_lookup_fn
-from repro.dist.sharding import (lm_kv_cache_pspecs, lm_param_pspecs,
-                                 packed_serve_pspecs, replicate_like,
-                                 tiered_hot_pspecs)
+from repro.dist.sharding import (lm_kv_cache_pspecs, lm_logits_pspecs,
+                                 lm_param_pspecs, packed_serve_pspecs,
+                                 replicate_like, tiered_hot_pspecs)
 
 
 class ServeCellDef(NamedTuple):
@@ -54,14 +54,40 @@ class ServeCellDef(NamedTuple):
         return f"{self.arch}/{self.shape}"
 
     @property
+    def fingerprint_blob(self) -> str:
+        """The raw repr the fingerprint digests — exposed so the
+        recompile-hazard pass (``repro.analysis.recompile``) can inspect it
+        for unstable content (``0x...`` object addresses from a default
+        ``__repr__``, which would fork the compile cache every process
+        restart) instead of reasoning about an opaque hash."""
+        return repr((self.kind, self.batch, sorted(self.meta.items(), key=str),
+                     self.static))
+
+    @property
     def fingerprint(self) -> str:
         """Digest of everything baked into the compiled executable beyond the
         input avals — the step closure's static config (``static``), kind and
         meta. Part of the cache key: two same-named registrations with
         different baked-in config must not share an executable."""
-        blob = repr((self.kind, self.batch, sorted(self.meta.items(), key=str),
-                     self.static))
-        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+        return hashlib.sha1(self.fingerprint_blob.encode()).hexdigest()[:12]
+
+    def abstract_signature(self) -> tuple:
+        """Traced-abstract-value signature of every input the executable sees:
+        ``((shape, dtype, weak_type), ...)`` over the flattened bound +
+        request pytrees, in call order.
+
+        This is exactly what distinguishes executables *beyond* the cache
+        key — two cells whose keys collide but whose signatures differ would
+        silently fork (or worse, warm-hit a wrong executable). The
+        recompile-hazard pass diffs keys against these signatures; weak-typed
+        leaves (Python scalars closed into ``bound``) are flagged because
+        their weak dtype re-traces against strongly-typed request arrays."""
+        sig = []
+        for leaf in jax.tree.leaves((self.bound, self.request_specs)):
+            aval = jax.api_util.shaped_abstractify(leaf)
+            sig.append((tuple(aval.shape), str(aval.dtype),
+                        bool(getattr(aval, "weak_type", False))))
+        return tuple(sig)
 
 
 def _sds(shape, dtype):
@@ -294,7 +320,7 @@ def lm_decode_slotted_cell(cfg, params, buffers, *, batch: int, max_len: int,
         request_specs=(_sds((batch, 1), jnp.int32), _sds((batch,), jnp.int32),
                        caches_sds),
         request_pspecs=(tok_ps, lens_ps, cache_ps),
-        out_pspecs=(tok_ps if batch > 1 else P(None, "model"), cache_ps),
+        out_pspecs=(lm_logits_pspecs(batch, dp=dp), cache_ps),
         meta={"kind": "decode_slotted", "batch": batch, "max_len": max_len,
               "kv_int8": kv_int8},
         static=cfg,
@@ -331,7 +357,7 @@ def lm_decode_cell(cfg, params, buffers, *, batch: int, max_len: int,
         bound_pspecs=(params_pspecs,),
         request_specs=(_sds((batch, 1), jnp.int32), caches_sds),
         request_pspecs=(tok_ps, cache_ps),
-        out_pspecs=(tok_ps if batch > 1 else P(None, "model"), cache_ps),
+        out_pspecs=(lm_logits_pspecs(batch, dp=dp), cache_ps),
         meta={"kind": "decode", "batch": batch, "max_len": max_len,
               "kv_int8": kv_int8},
         static=cfg,

@@ -185,7 +185,8 @@ class Engine:
     def _timed_call(self, reg: RegisteredCell, *request):
         t0 = time.perf_counter()
         out = reg.cell.compiled(*reg.bound, *request)
-        jax.block_until_ready(out)
+        # deliberate timing barrier: wall-clock per call is the product here
+        jax.block_until_ready(out)  # staticcheck: ignore[RL403]
         return out, (time.perf_counter() - t0) * 1e3
 
     def submit(self, ids, *, kind: str = "score",
@@ -383,6 +384,34 @@ class Engine:
         return next(iter(table.values()))
 
     # -- introspection ------------------------------------------------------
+
+    def registered_cells(self) -> dict:
+        """Every registered cell across the four lanes, keyed by its
+        ``CellKey``: {key: RegisteredCell}. The static-analysis runner
+        (``repro.analysis``) walks this to get each cell's definition *and*
+        its warm compiled executable (HLO text, cost analysis) without
+        re-deriving registration wiring — tiered cells unwrap to their
+        ``RegisteredCell``; lookup-split companions are included under their
+        own keys."""
+        out = {}
+
+        def add(reg):
+            if reg is None:
+                return
+            out[reg.cell.key] = reg
+            add(reg.lookup)
+
+        for reg in self._score.values():
+            add(reg)
+        for tc in self._tiered.values():
+            add(tc.reg)
+        for reg in self._retrieve.values():
+            add(reg)
+        for reg in self._decode.values():
+            add(reg)
+        for session in self.scheduler.sessions.values():
+            add(session.reg)
+        return out
 
     @property
     def compile_count(self) -> int:

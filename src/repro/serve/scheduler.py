@@ -259,7 +259,8 @@ class Scheduler:
             y = tc.reg.cell.compiled(*tc.reg.bound, x, cold)
             if overlap and k + 1 < len(chunks):
                 staged = stage(chunks[k + 1])   # under y's compute
-            jax.block_until_ready(y)
+            # deliberate timing barrier: chunk latency feeds engine.stats
+            jax.block_until_ready(y)  # staticcheck: ignore[RL403]
             total_ms = (time.perf_counter() - t0) * 1e3
             engine.stats.record(tc.reg.celldef.name, total_ms,
                                 valid_rows=chunk.n_valid,

@@ -102,3 +102,90 @@ def test_normalize_cost_handles_every_cost_analysis_shape():
     assert normalize_cost([]) is None
     assert normalize_cost(()) is None
     assert normalize_cost(None) is None
+
+
+# ---------------------------------------------------------------------------
+# cond_mode accounting against hand-written HLO (exact arithmetic: compiled
+# HLO adds fusion noise, so the branch bytes are authored by hand here).
+#
+# heavy: dot(p, p) on f32[8,8]   -> bytes 3*8*8*4 = 768, flops 2*64*8 = 1024
+# light: negate(p) on f32[8,8]   -> bytes 2*8*8*4 = 512, flops 0
+# entry: parameters + the conditional itself are skipped -> 0 bytes
+
+_COND_HLO = """\
+HloModule cond_by_hand
+
+%heavy (hp: f32[8,8]) -> f32[8,8] {
+  %hp = f32[8,8] parameter(0)
+  ROOT %hdot = f32[8,8] dot(%hp, %hp), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%light (lp: f32[8,8]) -> f32[8,8] {
+  %lp = f32[8,8] parameter(0)
+  ROOT %lneg = f32[8,8] negate(%lp)
+}
+
+ENTRY %main (pr: pred[], x: f32[8,8]) -> f32[8,8] {
+  %pr = pred[] parameter(0)
+  %x = f32[8,8] parameter(1)
+  ROOT %c = f32[8,8] conditional(%pr, %x, %x), true_computation=%heavy, false_computation=%light
+}
+"""
+
+
+def test_cond_two_branch_hand_computed_bytes():
+    res = {m: analyze(_COND_HLO, cond_mode=m)
+           for m in ("sum", "max", "min")}
+    heavy_b, light_b, dot_fl = 768, 512, 1024
+    assert res["sum"]["hbm_bytes_per_device"] == heavy_b + light_b
+    assert res["max"]["hbm_bytes_per_device"] == heavy_b
+    assert res["min"]["hbm_bytes_per_device"] == light_b
+    assert res["sum"]["flops_per_device"] == dot_fl
+    assert res["max"]["flops_per_device"] == dot_fl
+    assert res["min"]["flops_per_device"] == 0
+
+
+# lax.switch lowers to the branch_computations={...} syntax; branch costs
+# are authored to be pairwise distinct AND to put the dot in the *middle*
+# branch, so "max" (picked by bytes) must not inherit its flops:
+#   b0: negate            -> 512 bytes, 0 flops
+#   b1: dot               -> 768 bytes, 1024 flops
+#   b2: multiply + add    -> 1536 bytes, 0 flops
+
+_SWITCH_HLO = """\
+HloModule switch_by_hand
+
+%b0 (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  ROOT %o0 = f32[8,8] negate(%p0)
+}
+
+%b1 (p1: f32[8,8]) -> f32[8,8] {
+  %p1 = f32[8,8] parameter(0)
+  ROOT %o1 = f32[8,8] dot(%p1, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%b2 (p2: f32[8,8]) -> f32[8,8] {
+  %p2 = f32[8,8] parameter(0)
+  %t2 = f32[8,8] multiply(%p2, %p2)
+  ROOT %o2 = f32[8,8] add(%t2, %p2)
+}
+
+ENTRY %main (idx: s32[], x: f32[8,8]) -> f32[8,8] {
+  %idx = s32[] parameter(0)
+  %x = f32[8,8] parameter(1)
+  ROOT %c = f32[8,8] conditional(%idx, %x, %x, %x), branch_computations={%b0, %b1, %b2}
+}
+"""
+
+
+def test_switch_three_branch_hand_computed_bytes():
+    res = {m: analyze(_SWITCH_HLO, cond_mode=m)
+           for m in ("sum", "max", "min")}
+    assert res["sum"]["hbm_bytes_per_device"] == 512 + 768 + 1536
+    assert res["max"]["hbm_bytes_per_device"] == 1536   # b2: heaviest bytes
+    assert res["min"]["hbm_bytes_per_device"] == 512    # b0: lightest
+    # the dot lives in the un-picked middle branch: only "sum" charges it
+    assert res["sum"]["flops_per_device"] == 1024
+    assert res["max"]["flops_per_device"] == 0
+    assert res["min"]["flops_per_device"] == 0
