@@ -63,8 +63,13 @@ METHOD_CFGS = {
 
 
 def run_baseline(backbone: str, method: str, *, steps: int = STEPS,
-                 lam_override: float | None = None, comp_cfg_override=None):
-    """Train a non-MPE method; returns dict(auc, logloss, ratio, seconds)."""
+                 lam_override: float | None = None, comp_cfg_override=None,
+                 return_trained: bool = False):
+    """Train a non-MPE method; returns dict(auc, logloss, ratio, seconds).
+
+    ``return_trained`` additionally returns the trained serving state
+    ``{params, buffers, state, cfg}`` — what ``baseline_score_cell`` binds,
+    so ``compression_bench`` can measure serve p50/p99 per method."""
     name, comp_cfg = METHOD_CFGS[method]
     if comp_cfg_override is not None:
         comp_cfg = comp_cfg_override
@@ -91,8 +96,12 @@ def run_baseline(backbone: str, method: str, *, steps: int = STEPS,
     ev = bundle["eval_fn"](tr.params, bundle["buffers"], tr.state)
     ratio = comp.storage_ratio(tr.params["embedding"],
                                bundle["buffers"]["embedding"], comp_cfg)
-    return {"auc": ev["auc"], "logloss": ev["logloss"], "ratio": ratio,
-            "seconds": time.time() - t0}
+    out = {"auc": ev["auc"], "logloss": ev["logloss"], "ratio": ratio,
+           "seconds": time.time() - t0}
+    if return_trained:
+        return out, {"params": tr.params, "buffers": bundle["buffers"],
+                     "state": tr.state, "cfg": bundle["cfg"]}
+    return out
 
 
 def run_mpe(backbone: str, *, lam: float = LAM, steps: int = STEPS,

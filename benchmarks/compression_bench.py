@@ -1,0 +1,217 @@
+"""Compression benchmark matrix → BENCH_compression.json.
+
+The apples-to-apples accuracy-vs-bytes-vs-latency matrix the storage-
+compression surveys (arxiv 2311.15578, 2408.02304) call for: one row per
+method — MPE served at several **live-repack byte budgets** (the
+``repro.serve.repack`` path: each budget is planned, re-packed and swapped
+into the running engine with zero recompiles) against every baseline in
+``src/repro/core/baselines/`` (plain backbone, qr_trick, pep, optfs, alpt,
+lsq_uniform) — each with an accuracy proxy (AUC/logloss on the shared
+synthetic CTR eval set), embedding payload bytes, and serve p50/p99 measured
+through the same ``Engine.score`` request path (baselines serve through
+``repro.serve.baseline_score_cell``; MPE through the packed cells).
+
+CI runs the ``--smoke`` variant every PR and diffs the artifact against the
+checked-in baseline via ``scripts/bench_compare.py``.
+
+    PYTHONPATH=src python benchmarks/compression_bench.py --smoke
+    PYTHONPATH=src python benchmarks/compression_bench.py --out benchmarks/artifacts/BENCH_compression.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:        # script invocation: python benchmarks/compression_bench.py
+    from common import (FIELD_VOCABS, LAM, METHOD_CFGS, dataset, fields,
+                        run_baseline, run_mpe)
+except ImportError:   # module invocation: python -m benchmarks.compression_bench
+    from benchmarks.common import (FIELD_VOCABS, LAM, METHOD_CFGS, dataset,
+                                   fields, run_baseline, run_mpe)
+from repro.core.inference import build_packed_table
+from repro.core.mpe import MPEConfig, make_groups
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.serve import Engine, baseline_score_cell
+from repro.serve.repack import RepackPlanner, TableSwapper, headroom_capacities
+from repro.train.metrics import auc as auc_metric
+from repro.train.metrics import logloss as logloss_metric
+
+FULL = dict(steps=150, serve_steps=30, serve_batch=256, p99_rows=512,
+            budgets=(1.0, 0.75, 0.5, 0.25), headroom=0.6)
+SMOKE = dict(steps=25, serve_steps=8, serve_batch=100, p99_rows=128,
+             budgets=(1.0, 0.5), headroom=0.6)
+
+BASELINES = ("backbone", "qr", "pep", "optfs", "alpt", "lsq")
+
+
+def _dense_bytes() -> int:
+    return sum(FIELD_VOCABS) * 16 * 4          # fp32 backbone table
+
+
+def _time_scores(engine, serve_batch: int, n_steps: int) -> dict:
+    """p50/p99 of end-to-end ``Engine.score`` wall-clock over a fresh
+    request stream (one warmup request dropped)."""
+    req_ds = dataset()
+    ids0 = req_ds.batch(20_000)["ids"][:serve_batch]
+    engine.score(ids0)                         # warm
+    lat = []
+    for step in range(n_steps):
+        ids = req_ds.batch(21_000 + step)["ids"][:serve_batch]
+        t0 = time.perf_counter()
+        engine.score(ids)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    return {"p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3)}
+
+
+def _packed_eval(serve_cfg, params, state, buffers, eval_batches) -> dict:
+    """AUC/logloss of a packed table through the eval-mode forward — the
+    accuracy proxy for each repack budget (mirrors ``repro.zoo._ctr_eval``)."""
+    scores, labels = [], []
+    for b in eval_batches:
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        logits, _, _ = DLRM.apply(params, buffers, state, batch, serve_cfg,
+                                  train=False)
+        scores.append(np.asarray(jax.nn.sigmoid(logits)))
+        labels.append(np.asarray(batch["label"]))
+    s, l = np.concatenate(scores), np.concatenate(labels)
+    return {"auc": float(auc_metric(jnp.asarray(l), jnp.asarray(s))),
+            "logloss": float(logloss_metric(jnp.asarray(l, jnp.float32),
+                                            jnp.asarray(s)))}
+
+
+def run_mpe_rows(cfg: dict) -> dict:
+    """MPE at each byte budget via the live serving-time repack path."""
+    out, res = run_mpe("dnn", steps=cfg["steps"], return_result=True)
+    emb = res["final_params"]["embedding"]
+    caps = headroom_capacities(res["packed_meta"], fraction=cfg["headroom"])
+    mpe_cfg = MPEConfig(lam=LAM)
+    table, meta = build_packed_table(
+        np.asarray(emb["emb"]), np.asarray(res["feature_bits_idx"]),
+        np.asarray(emb["alpha"]), np.asarray(emb["beta"]), mpe_cfg,
+        row_capacities=caps)
+
+    base = DLRMConfig(fields=fields(), d_embed=16, mlp_hidden=(64, 32),
+                      backbone="dnn")
+    serve_cfg = base._replace(compressor="packed",
+                              comp_cfg={"bits": meta["bits"], "d": meta["d"],
+                                        "n": meta["n"]})
+    params = {k: v for k, v in res["final_params"].items() if k != "embedding"}
+    params["embedding"] = table
+    buffers = dict(res["buffers"], embedding={})
+    state = res["state"]
+
+    engine = Engine()
+    engine.register_packed_model("mpe", DLRM, serve_cfg, params, state,
+                                 buffers, shapes={"serve_p99": cfg["p99_rows"]},
+                                 lookup_split=False)
+    freqs = dataset().expected_frequencies()
+    gof, _ = make_groups(freqs, mpe_cfg.group_size)
+    planner = RepackPlanner(meta, gof, caps, frequencies=freqs)
+    swapper = TableSwapper(engine, emb["emb"], emb["alpha"], emb["beta"],
+                           mpe_cfg, capacities=caps)
+
+    gbits = np.asarray(res["group_bits"])
+    bytes_full = planner.bytes_packed(gbits)
+    eval_batches = dataset().eval_set(4)
+    dense = _dense_bytes()
+    rows = {}
+    for frac in cfg["budgets"]:
+        c0 = engine.compile_count
+        plan = planner.plan_budget(gbits, int(frac * bytes_full))
+        swapper.repack(plan)
+        engine.sched_step()                    # the atomic swap point
+        if engine.compile_count != c0:
+            raise RuntimeError("live repack recompiled a cell — the "
+                               "zero-recompile invariant is broken")
+        lat = _time_scores(engine, cfg["serve_batch"], cfg["serve_steps"])
+        table_b, _ = swapper.build(plan.feature_bits_idx)
+        ev = _packed_eval(serve_cfg, dict(params, embedding=table_b), state,
+                          buffers, eval_batches)
+        rows[f"mpe@{frac:.2f}"] = {
+            **ev, **lat,
+            "bytes": int(plan.bytes_packed),
+            "ratio": round(plan.bytes_packed / dense, 6),
+            "n_features_moved": int(plan.n_features_moved),
+            "recompiles": engine.compile_count - c0,
+        }
+        print(f"[compression] mpe@{frac:.2f}: auc={ev['auc']:.4f} "
+              f"bytes={plan.bytes_packed} p50={lat['p50_ms']}ms "
+              f"(recompiles=0, moved={plan.n_features_moved})")
+    rows["mpe@1.00" if 1.0 in cfg["budgets"] else next(iter(rows))][
+        "search_auc"] = out["auc"]
+    return rows
+
+
+def run_baseline_row(method: str, cfg: dict) -> dict:
+    """One baseline: train, eval, then serve through the generic cell."""
+    r, trained = run_baseline("dnn", method, steps=cfg["steps"],
+                              return_trained=True)
+    engine = Engine()
+    engine.register(baseline_score_cell(
+        DLRM, trained["cfg"], trained["params"], trained["state"],
+        trained["buffers"], batch=cfg["p99_rows"], arch=method,
+        shape="serve_p99"))
+    lat = _time_scores(engine, cfg["serve_batch"], cfg["serve_steps"])
+    row = {"auc": r["auc"], "logloss": r["logloss"],
+           "bytes": int(r["ratio"] * _dense_bytes()),
+           "ratio": round(r["ratio"], 6), "seconds": round(r["seconds"], 2),
+           **lat}
+    print(f"[compression] {method}: auc={r['auc']:.4f} bytes={row['bytes']} "
+          f"p50={lat['p50_ms']}ms")
+    return row
+
+
+def run(cfg: dict) -> dict:
+    t0 = time.time()
+    methods = run_mpe_rows(cfg)
+    for m in BASELINES:
+        assert m in METHOD_CFGS, m
+        methods[m] = run_baseline_row(m, cfg)
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items()},
+        "env": {"jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "platform": platform.platform()},
+        "dense_bytes": _dense_bytes(),
+        "methods": methods,
+        "train_s": round(time.time() - t0, 2),
+        "unix_time": int(time.time()),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trainings + two budgets (the CI data point)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default benchmarks/artifacts/"
+                         "BENCH_compression.json)")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or os.path.join("benchmarks", "artifacts",
+                                        "BENCH_compression.json")
+    result = run(dict(SMOKE if args.smoke else FULL,
+                      mode="smoke" if args.smoke else "full"))
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"{'method':<12} {'auc':>7} {'bytes':>10} {'p50_ms':>8} {'p99_ms':>8}")
+    for name, row in result["methods"].items():
+        print(f"{name:<12} {row['auc']:>7.4f} {row['bytes']:>10} "
+              f"{row['p50_ms']:>8} {row['p99_ms']:>8}")
+    print(f"[compression] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

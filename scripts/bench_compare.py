@@ -27,11 +27,12 @@ import os
 import re
 import sys
 
-SKIP = re.compile(r"(^|\.)(unix_time|train_s|register_s|compile|compiles|"
-                  r"env|config)(\.|$)")
+SKIP = re.compile(r"(^|\.)(unix_time|train_s|register_s|seconds|compile|"
+                  r"compiles|env|config)(\.|$)")
 LATENCY = re.compile(r"(_ms|p50|p99|ms_per_step)($|\.)")
-# higher-is-better metrics (BENCH_queue): warn on *decreases* instead
-THROUGHPUT = re.compile(r"(goodput|_tok_s|_speedup|occupancy)($|\.|_)")
+# higher-is-better metrics (BENCH_queue goodput, BENCH_compression accuracy):
+# warn on *decreases* instead
+THROUGHPUT = re.compile(r"(goodput|_tok_s|_speedup|occupancy|auc)($|\.|_)")
 WARN_PCT = 20.0
 
 

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Docs link check — the blocking CI `docs` job.
+"""Docs link + command + docstring check — the blocking CI `docs` job.
 
 Validates that intra-repo references in the documentation actually exist:
 
@@ -8,15 +8,25 @@ Validates that intra-repo references in the documentation actually exist:
      mailto links skipped);
   2. every backticked repo path (`src/...`, `scripts/verify.sh`, ...) with a
      source-file extension exists — generated artifacts (``BENCH_*.json``,
-     paths under ``benchmarks/artifacts/``) are exempt.
+     paths under ``benchmarks/artifacts/``) are exempt;
+  3. every command in a fenced ```bash block resolves: a ``python -m
+     repro.x.y`` / ``python -m benchmarks.x`` module must map to a real
+     source file, and any ``scripts/*.py``-style path named in a command
+     must exist (the doc-rot class the link checker misses);
+  4. with ``--docstrings``: a pure-AST pass (no imports — the docs CI job
+     installs no jax) asserting every name exported from the public
+     ``repro.cache`` and ``repro.analysis`` ``__init__``s and every public
+     top-level name in ``repro.serve.repack`` carries a docstring.
 
 Exit code 0 when clean, 1 with a per-reference report otherwise. Run from
 anywhere: paths resolve against the repo root (this file's parent's parent).
 
-    python scripts/check_docs.py
+    python scripts/check_docs.py --docstrings
 """
 from __future__ import annotations
 
+import argparse
+import ast
 import re
 import sys
 from pathlib import Path
@@ -30,6 +40,23 @@ PATH_RE = re.compile(
     r"`([A-Za-z0-9_.\-/]+\.(?:py|md|sh|yml|yaml|toml|json|txt))`")
 GENERATED = re.compile(r"(^|/)BENCH_[^/]*\.json$|^benchmarks/artifacts/|"
                        r"^out\.json$")
+
+# fenced command blocks + the two command shapes we can statically resolve
+BASH_RE = re.compile(r"```(?:bash|sh|console)[^\n]*\n(.*?)```", re.S)
+MOD_RE = re.compile(r"python[0-9.]*\s+-m\s+([A-Za-z0-9_.]+)")
+CMD_PATH_RE = re.compile(
+    r"(?<![\w/.\-])((?:scripts|benchmarks|src|tests|docs)/[\w./\-]+"
+    r"\.(?:py|sh|md))")
+# top-level packages the repo owns — `python -m pytest` etc. are skipped
+LOCAL_PKGS = {"repro", "benchmarks", "scripts", "tests"}
+
+# --docstrings targets: public package __init__s (every exported name) and
+# the repack module (every public top-level name)
+DOCSTRING_TARGETS = {
+    "repro.cache": "src/repro/cache/__init__.py",
+    "repro.analysis": "src/repro/analysis/__init__.py",
+    "repro.serve.repack": "src/repro/serve/repack.py",
+}
 
 
 def doc_files() -> list[Path]:
@@ -52,7 +79,128 @@ def resolve(md_file: Path, target: str) -> bool:
             or (REPO / target).exists())
 
 
-def check() -> int:
+def module_file(mod: str) -> Path | None:
+    """Map a dotted module to its source file under src/ or the repo root."""
+    rel = Path(*mod.split("."))
+    for root in (REPO / "src", REPO):
+        for cand in ((root / rel).with_suffix(".py"),
+                     root / rel / "__init__.py"):
+            if cand.exists():
+                return cand
+    return None
+
+
+def check_bash_blocks(md: Path, text: str, rel) -> tuple[int, list[str]]:
+    """Resolve `python -m` modules and repo-path arguments inside fenced
+    command blocks."""
+    errors, n_refs = [], 0
+    for block in BASH_RE.finditer(text):
+        for line in block.group(1).splitlines():
+            line = line.split("#", 1)[0]
+            for m in MOD_RE.finditer(line):
+                mod = m.group(1)
+                if mod.split(".", 1)[0] not in LOCAL_PKGS:
+                    continue
+                n_refs += 1
+                if module_file(mod) is None:
+                    errors.append(f"{rel}: bash block names module "
+                                  f"`{mod}` which does not resolve")
+            for m in CMD_PATH_RE.finditer(line):
+                target = m.group(1)
+                if GENERATED.search(target):
+                    continue
+                n_refs += 1
+                if not resolve(md, target):
+                    errors.append(f"{rel}: bash block references missing "
+                                  f"path -> {target}")
+    return n_refs, errors
+
+
+def _is_def(node) -> bool:
+    return isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef))
+
+
+def check_docstrings() -> list[str]:
+    """AST-only docstring audit over the public API targets (no imports)."""
+    errors: list[str] = []
+    for mod, rel in DOCSTRING_TARGETS.items():
+        path = REPO / rel
+        if not path.exists():
+            errors.append(f"{rel}: docstring target missing")
+            continue
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        if not ast.get_docstring(tree):
+            errors.append(f"{rel}: missing module docstring")
+        if rel.endswith("__init__.py"):
+            errors.extend(_check_exports(mod, rel, tree))
+        else:
+            for node in tree.body:
+                if _is_def(node) and not node.name.startswith("_") \
+                        and not ast.get_docstring(node):
+                    errors.append(f"{rel}: public `{node.name}` has no "
+                                  f"docstring")
+    return errors
+
+
+def _check_exports(mod: str, rel: str, tree: ast.Module) -> list[str]:
+    """Every name in a package ``__init__``'s ``__all__`` must carry a
+    docstring at its definition site (re-exports are followed one hop)."""
+    errors: list[str] = []
+    exported: list[str] = []
+    imports: dict[str, tuple[str, str]] = {}
+    local: dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    exported = list(ast.literal_eval(node.value))
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                imports[a.asname or a.name] = (node.module, a.name)
+        elif _is_def(node):
+            local[node.name] = node
+    if not exported:
+        return [f"{rel}: no __all__ — the public surface is implicit"]
+    for name in exported:
+        node, where = local.get(name), rel
+        if node is None and name in imports:
+            src_mod, orig = imports[name]
+            src = module_file(src_mod)
+            if src is None:
+                errors.append(f"{rel}: exported `{name}` imports from "
+                              f"unresolvable module {src_mod}")
+                continue
+            node, src = _find_def(src, orig)
+            where = str(src.relative_to(REPO)) if src is not None else rel
+        if node is None:
+            errors.append(f"{rel}: cannot locate definition of exported "
+                          f"`{name}`")
+        elif not ast.get_docstring(node):
+            errors.append(f"{where}: exported `{name}` has no docstring")
+    return errors
+
+
+def _find_def(src: Path, name: str, depth: int = 5):
+    """Locate a def/class by name in ``src``, following chained
+    ``from x import y`` re-exports up to ``depth`` hops."""
+    if depth == 0:
+        return None, None
+    tree = ast.parse(src.read_text(encoding="utf-8"))
+    for n in tree.body:
+        if _is_def(n) and n.name == name:
+            return n, src
+    for n in tree.body:
+        if isinstance(n, ast.ImportFrom) and n.module:
+            for a in n.names:
+                if (a.asname or a.name) == name:
+                    nxt = module_file(n.module)
+                    if nxt is not None:
+                        return _find_def(nxt, a.name, depth - 1)
+    return None, None
+
+
+def check(docstrings: bool = False) -> int:
     files = doc_files()
     if not files:
         print("check_docs: no documentation files found", file=sys.stderr)
@@ -79,12 +227,25 @@ def check() -> int:
             n_refs += 1
             if not resolve(md, target):
                 errors.append(f"{rel}: referenced path missing -> {target}")
+        n_cmd, cmd_errors = check_bash_blocks(md, text, rel)
+        n_refs += n_cmd
+        errors.extend(cmd_errors)
+    n_doc = 0
+    if docstrings:
+        doc_errors = check_docstrings()
+        n_doc = len(doc_errors)
+        errors.extend(doc_errors)
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
-    print(f"check_docs: {len(files)} files, {n_refs} intra-repo references, "
-          f"{len(errors)} broken")
+    print(f"check_docs: {len(files)} files, {n_refs} intra-repo references"
+          + (", docstring audit on" if docstrings else "")
+          + f", {len(errors)} broken")
     return 1 if errors else 0
 
 
 if __name__ == "__main__":
-    sys.exit(check())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docstrings", action="store_true",
+                    help="also audit public-API docstrings (pure AST)")
+    args = ap.parse_args()
+    sys.exit(check(docstrings=args.docstrings))

@@ -78,21 +78,40 @@ class TieredTableStore:
                      "n": int(meta["n"])}
         self.hot_fraction = float(hot_fraction)
         self.device = device
-        bits, d, n = self.meta["bits"], self.meta["d"], self.meta["n"]
+        self._freqs = np.asarray(frequencies)
+        bits = self.meta["bits"]
 
         width_idx = np.asarray(table["width_idx"])
-        local_idx = np.asarray(table["local_idx"])
-        is_hot = hot_feature_mask(frequencies, hot_fraction)
-        # zero-width features never occupy a subtable row: serve them from
-        # the hot tier (their embedding is the zero vector — no bytes at all)
-        for i, b in enumerate(bits):
-            if b == 0:
-                is_hot[width_idx == i] = True
+        is_hot = self._hot_mask(width_idx)
 
         if row_pad_multiple is None:
             n_widths = sum(1 for b in bits if b != 0)
             row_pad_multiple = _auto_pad_multiple(max(int(is_hot.sum()), 1),
                                                   max(n_widths, 1))
+        self._row_pad_multiple = int(row_pad_multiple)
+
+        self._rebuild(table, is_hot, capacities=None)
+        self.reset_counters()
+
+    def _hot_mask(self, width_idx: np.ndarray) -> np.ndarray:
+        """Frequency policy for the hot tier: top-``hot_fraction`` features,
+        plus every zero-width feature — those never occupy a subtable row
+        (their embedding is the zero vector), so hot residency is free."""
+        is_hot = hot_feature_mask(self._freqs, self.hot_fraction)
+        for i, b in enumerate(self.meta["bits"]):
+            if b == 0:
+                is_hot[width_idx == i] = True
+        return is_hot
+
+    def _rebuild(self, table, is_hot: np.ndarray,
+                 capacities: dict | None) -> None:
+        """(Re)split ``table`` into the two tiers. ``capacities`` pins each
+        hot subtable to an exact row count (the repack path — compiled hot
+        shapes must survive); ``None`` pads to ``row_pad_multiple``."""
+        bits, d, n = self.meta["bits"], self.meta["d"], self.meta["n"]
+        width_idx = np.asarray(table["width_idx"])
+        local_idx = np.asarray(table["local_idx"])
+        device = self.device
 
         tier_local = np.zeros((n,), np.int32)
         hot_subs, cold_subs = {}, {}
@@ -111,7 +130,14 @@ class TieredTableStore:
             n_b, _ = int_bounds(b)
             pad_row = np.asarray(
                 packing.pack_codes(jnp.full((1, d), n_b, jnp.int32), b))
-            padded = _pad_rows(hot_f.size, row_pad_multiple)
+            if capacities is not None:
+                padded = int(capacities[f"b{b}"])
+                if hot_f.size > padded:
+                    raise ValueError(
+                        f"hot tier b{b} holds {hot_f.size} rows, over its "
+                        f"compiled capacity {padded}")
+            else:
+                padded = _pad_rows(hot_f.size, self._row_pad_multiple)
             hot_rows = np.tile(pad_row, (padded, 1))
             hot_rows[:hot_f.size] = sub[local_idx[hot_f]]
             hot_subs[f"b{b}"] = jax.device_put(jnp.asarray(hot_rows), device)
@@ -138,7 +164,43 @@ class TieredTableStore:
         }
         self._storage = {"hot_bytes": int(hot_bytes),
                          "cold_bytes": int(cold_bytes)}
-        self.reset_counters()
+
+    # -- serving-time repack (repro.serve.repack) ---------------------------
+
+    def refresh(self, table, meta, frequencies=None) -> None:
+        """Re-seat a re-packed table into this store *without changing any
+        hot-tier array shape* — the hook ``Engine._rebind_tiered`` uses to
+        keep compiled tiered cells valid across a serving-time repack.
+
+        The hot/cold split is recomputed from the (optionally updated)
+        frequencies under the same policy as construction, then clamped to
+        the compiled hot-subtable capacities: if a repack widened enough hot
+        features to overflow a bucket, the coldest overflow features demote
+        to the cold tier (flipping ``is_hot`` values only — the masks keep
+        their shapes, so the executable is unchanged). Counters stay
+        cumulative; ``storage()`` reflects the new split."""
+        meta = {"bits": tuple(meta["bits"]), "d": int(meta["d"]),
+                "n": int(meta["n"])}
+        if meta != self.meta:
+            raise ValueError(
+                f"refresh changes the table's static metadata "
+                f"({self.meta} -> {meta}) — that is a re-registration, "
+                f"not a repack")
+        if frequencies is not None:
+            self._freqs = np.asarray(frequencies)
+
+        width_idx = np.asarray(table["width_idx"])
+        is_hot = self._hot_mask(width_idx)
+        caps = {k: int(v.shape[0]) for k, v in self.hot["subtables"].items()}
+        for i, b in enumerate(self.meta["bits"]):
+            if b == 0:
+                continue
+            hot_f = np.nonzero(is_hot & (width_idx == i))[0]
+            over = hot_f.size - caps[f"b{b}"]
+            if over > 0:    # demote the coldest overflow features
+                order = hot_f[np.argsort(self._freqs[hot_f], kind="stable")]
+                is_hot[order[:over]] = False
+        self._rebuild(table, is_hot, capacities=caps)
 
     # -- counters -----------------------------------------------------------
 

@@ -42,13 +42,21 @@ def _auto_pad_multiple(n: int, n_widths: int, cap: int = 512) -> int:
 
 
 def build_packed_table(emb, bits_idx_per_feature, alpha, beta, cfg: MPEConfig,
-                       row_pad_multiple: int | None = None):
+                       row_pad_multiple: int | None = None,
+                       row_capacities: dict | None = None):
     """Quantize + pack a trained table.
 
     Returns a dict pytree ``table`` plus a static metadata dict.
     ``row_pad_multiple`` defaults to a size-aware power of two (see
     ``_auto_pad_multiple``); pass 512 explicitly to force production mesh
     alignment on a small table.
+
+    ``row_capacities`` (``{"b<width>": rows, ...}``) pins each subtable to an
+    *exact* padded row count instead of the multiple-derived one — the
+    serving-time repack path (``repro.serve.repack``) uses this to re-pack a
+    new precision assignment into the byte layout a compiled executable
+    already expects, so the swap never recompiles. Raises ``ValueError`` when
+    a width bucket holds more real rows than its pinned capacity.
     """
     emb = np.asarray(emb)
     bits_idx = np.asarray(bits_idx_per_feature)
@@ -68,7 +76,15 @@ def build_packed_table(emb, bits_idx_per_feature, alpha, beta, cfg: MPEConfig,
             continue
         rows = emb[sel] if sel.size else np.zeros((0, d), emb.dtype)
         codes = np.asarray(quantize_codes(jnp.asarray(rows), alpha_np[i], beta_np, int(b)))
-        padded = _pad_rows(codes.shape[0], row_pad_multiple)
+        if row_capacities is not None:
+            padded = int(row_capacities[f"b{b}"])
+            if codes.shape[0] > padded:
+                raise ValueError(
+                    f"width bucket b{b} holds {codes.shape[0]} rows, over its "
+                    f"pinned capacity {padded} — a capacity-conforming repack "
+                    f"must assign within the compiled subtable shapes")
+        else:
+            padded = _pad_rows(codes.shape[0], row_pad_multiple)
         n_b, _ = int_bounds(b)
         codes_p = np.full((padded, d), n_b, np.int32)
         codes_p[:codes.shape[0]] = codes

@@ -18,9 +18,18 @@ batch-assembly / compute breakdown, shed counts and per-cell occupancy.
 Per-cell p50/p99 latency is reported in the Figure-5 lookup-vs-compute split,
 plus the cell-cache counters (a warm process performs zero recompiles).
 
+``--repack-budget`` demonstrates **serving-time precision adaptation**
+(``repro.serve.repack``): halfway through the request stream the planner
+emits a new per-group assignment at that fraction of the current packed
+payload bytes and the swapper re-packs + swaps it into the live cells — the
+run asserts the swap compiled nothing. Pair with ``--repack-headroom`` to
+pack the serving table with spare per-width row capacity so demoted groups
+can land in intermediate widths instead of bottoming out at width 0.
+
     python -m repro.launch.serve --steps 20 --batch 300
     python -m repro.launch.serve --steps 50 --batch 300 --bulk 20000 --json out.json
     python -m repro.launch.serve --qps 20 --steps 100 --batch 60 --deadline-ms 2000
+    python -m repro.launch.serve --steps 20 --repack-budget 0.6 --repack-headroom 0.5
 """
 from __future__ import annotations
 
@@ -99,6 +108,28 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
     return engine
 
 
+def repack_tools(engine, res, frequencies, *, lam: float = 3e-5):
+    """A ``(RepackPlanner, TableSwapper)`` pair bound to a live engine.
+
+    ``res`` is the ``run_mpe_pipeline`` result dict (the swapper re-packs
+    from its retrained full-precision master embedding); ``frequencies``
+    orders the planner's demote/promote priorities and recovers the
+    feature→group map the pipeline trained with (serving buffers don't carry
+    it). Capacities default to the engine's live subtable shapes."""
+    from repro.core.mpe import make_groups
+    from repro.serve.repack import (RepackPlanner, TableSwapper,
+                                    subtable_capacities)
+    mpe_cfg = MPEConfig(lam=lam)
+    gof, _ = make_groups(frequencies, mpe_cfg.group_size)
+    planner = RepackPlanner(res["packed_meta"], gof,
+                            subtable_capacities(engine.live_packed_table()),
+                            frequencies=frequencies)
+    emb = res["final_params"]["embedding"]
+    swapper = TableSwapper(engine, emb["emb"], emb["alpha"], emb["beta"],
+                           mpe_cfg)
+    return planner, swapper
+
+
 def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
                   seed: int = 0, deadline_ms: float | None = None,
                   kind: str = "score") -> dict:
@@ -174,6 +205,17 @@ def main(argv=None):
                          "pinning this fraction of features device-resident "
                          "(repro.cache; requests go through score_tiered "
                          "with cold fills prefetched one chunk ahead)")
+    ap.add_argument("--repack-budget", type=float, default=None,
+                    help="serving-time precision adaptation: halfway through "
+                         "the request stream, plan a new per-group "
+                         "assignment at this fraction of the current packed "
+                         "payload bytes and swap it into the live cells "
+                         "(repro.serve.repack; zero recompiles, asserted)")
+    ap.add_argument("--repack-headroom", type=float, default=None,
+                    help="pack the serving table with every non-zero width "
+                         "bucket sized to hold this fraction of the features "
+                         "(headroom_capacities), so repacks can move groups "
+                         "between intermediate widths")
     ap.add_argument("--mesh", default=None,
                     help="'dp,mp', 'pod,dp,mp' or 'auto': compile the serve "
                          "cells against a (data, model) — or multi-pod "
@@ -195,6 +237,19 @@ def main(argv=None):
     print(f"[serve] packed table: ratio={res['storage_ratio']:.4f} "
           f"bytes={res['packed_bytes']}")
 
+    if args.repack_headroom is not None:
+        from repro.core.inference import build_packed_table
+        from repro.serve.repack import headroom_capacities
+        emb = res["final_params"]["embedding"]
+        caps = headroom_capacities(res["packed_meta"],
+                                   fraction=args.repack_headroom)
+        table, meta = build_packed_table(
+            emb["emb"], res["feature_bits_idx"], emb["alpha"], emb["beta"],
+            MPEConfig(lam=3e-5), row_capacities=caps)
+        params["embedding"] = table
+        res = dict(res, packed_table=table, packed_meta=meta)
+        print(f"[serve] headroom capacities: {caps}")
+
     store = None
     if args.hot_frac is not None:
         from repro.cache import TieredTableStore
@@ -215,18 +270,45 @@ def main(argv=None):
 
     # request stream at the *requested* batch size — decoupled from training
     req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
+
+    repack_info = None
+
+    def _queue_repack():
+        """Plan at the budget and queue the swap — it lands atomically at
+        the engine's next ``sched_step`` boundary, mid-stream."""
+        nonlocal repack_info
+        freqs = SyntheticCTR(spec).expected_frequencies()
+        planner, swapper = repack_tools(engine, res, freqs)
+        gbits = np.asarray(res["group_bits"])
+        plan = planner.plan_budget(
+            gbits, int(args.repack_budget * planner.bytes_packed(gbits)))
+        swapper.repack(plan)
+        repack_info = (engine.compile_count, plan)
+
     open_loop = None
     if args.qps:
         engine.score(req_ds.batch(9_999)["ids"])   # warm the cells
+        if args.repack_budget is not None:
+            _queue_repack()   # applies at the open loop's first round
         open_loop = run_open_loop(
             engine, lambda i: req_ds.batch(10_000 + i)["ids"], args.steps,
             args.qps, seed=args.seed, deadline_ms=args.deadline_ms)
     else:
         for step in range(args.steps):
+            if args.repack_budget is not None and step == args.steps // 2:
+                _queue_repack()
             ids = req_ds.batch(10_000 + step)["ids"]
             engine.score(ids)
             if store is not None:
                 engine.score_tiered(ids)
+    if repack_info is not None:
+        c0, plan = repack_info
+        if engine.compile_count != c0:
+            raise RuntimeError("serving-time repack recompiled a cell — the "
+                               "zero-recompile invariant is broken")
+        print(f"[serve] repack: bytes {plan.bytes_before} -> "
+              f"{plan.bytes_packed} ({plan.n_features_moved} features "
+              f"moved), swaps={engine.swaps_applied}, recompiles=0")
     if args.bulk:
         bulk_ds = SyntheticCTR(spec._replace(batch_size=args.bulk))
         bulk_ids = bulk_ds.batch(99_999)["ids"]

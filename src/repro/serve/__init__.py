@@ -24,15 +24,24 @@ The request-lifecycle stack, composable bottom-up:
 harness in ``repro.launch.cells``. Tiered (hot/cold) serving builds on
 ``repro.cache``: ``Engine.register_tiered_model`` + ``Engine.score_tiered``
 gather hot rows device-locally and overlap cold-row fills with compute.
+
+``repro.serve.repack`` adds serving-time precision adaptation on top:
+``RepackPlanner`` turns a bytes budget or tier-pressure signal into a new
+per-group precision assignment, ``TableSwapper`` re-packs it into the live
+subtable layout and swaps it through ``Engine.request_swap`` — zero
+recompiles, applied atomically between ``sched_step`` rounds.
 """
 from repro.serve.batcher import Chunk, RequestBatcher, Span
 from repro.serve.cache import CellCache, CellKey, CompiledCell, mesh_signature
-from repro.serve.cells import (ServeCellDef, lm_decode_cell,
-                               lm_decode_slotted_cell, packed_lookup_cell,
-                               packed_score_cell, packed_score_step,
-                               tiered_score_cell, two_tower_retrieval_cell)
+from repro.serve.cells import (ServeCellDef, baseline_score_cell,
+                               lm_decode_cell, lm_decode_slotted_cell,
+                               packed_lookup_cell, packed_score_cell,
+                               packed_score_step, tiered_score_cell,
+                               two_tower_retrieval_cell)
 from repro.serve.engine import Engine
 from repro.serve.queue import AdmissionQueue, Request
+from repro.serve.repack import (RepackPlan, RepackPlanner, TableSwapper,
+                                headroom_capacities, subtable_capacities)
 from repro.serve.scheduler import DecodeSession, Scheduler
 from repro.serve.stats import LatencyStats, RequestStats
 
@@ -40,7 +49,10 @@ __all__ = [
     "CellCache", "CellKey", "CompiledCell", "mesh_signature",
     "Chunk", "Span", "RequestBatcher", "LatencyStats", "RequestStats",
     "AdmissionQueue", "Request", "Scheduler", "DecodeSession",
-    "ServeCellDef", "packed_score_cell", "packed_score_step",
+    "ServeCellDef", "baseline_score_cell", "packed_score_cell",
+    "packed_score_step",
     "packed_lookup_cell", "tiered_score_cell", "two_tower_retrieval_cell",
     "lm_decode_cell", "lm_decode_slotted_cell", "Engine",
+    "RepackPlan", "RepackPlanner", "TableSwapper",
+    "headroom_capacities", "subtable_capacities",
 ]

@@ -157,6 +157,34 @@ def packed_score_cell(model, cfg, params, state, buffers, *, batch: int,
     )
 
 
+def baseline_score_cell(model, cfg, params, state, buffers, *, batch: int,
+                        arch: str, shape: str, dp=("data",)) -> ServeCellDef:
+    """Batched CTR scoring for a *baseline* compressor (plain, qr, pep,
+    optfs, alpt, lsq — anything registered in ``core.compressors``):
+    ``ids (B, F) -> logits (B,)``.
+
+    The same eval-mode forward as ``packed_score_cell``, but the dense
+    baseline ``params`` replicate instead of packed-table row-sharding —
+    baseline tables aren't width-bucketed, so ``packed_serve_pspecs`` doesn't
+    apply. This is how ``benchmarks/compression_bench.py`` gets
+    apples-to-apples serve p50/p99 for every ``repro.core.baselines`` method
+    against the packed MPE path."""
+    n_fields = len(cfg.fields)
+    return ServeCellDef(
+        arch=arch, shape=shape, kind="score", batch=batch,
+        step_fn=packed_score_step(model, cfg),
+        bound=(params, state, buffers),
+        bound_pspecs=(replicate_like(params), replicate_like(state),
+                      replicate_like(buffers)),
+        request_specs=(_sds((batch, n_fields), jnp.int32),),
+        request_pspecs=(P(dp, None),),
+        out_pspecs=P(dp),
+        meta={"kind": "score", "batch": batch, "n_fields": n_fields,
+              "shard_lookup": False},
+        static=cfg,
+    )
+
+
 def packed_lookup_cell(table, meta, offsets, *, batch: int, n_fields: int,
                        arch: str, shape: str, dp=("data",),
                        rows_axes=("model",)) -> ServeCellDef:

@@ -89,6 +89,8 @@ class Engine:
         self._decode: dict[str, RegisteredCell] = {}    # arch -> cell
         self._tiered: dict[str, TieredCell] = {}        # bucket name -> cell
         self._tiered_batcher = RequestBatcher()
+        self._pending_swaps: list[tuple] = []           # (arch, table, meta)
+        self.swaps_applied = 0
 
     # -- registration -------------------------------------------------------
 
@@ -180,6 +182,98 @@ class Engine:
             self._tiered[shape] = TieredCell(reg, store, offsets)
             self._tiered_batcher.register(shape, rows)
 
+    # -- serving-time precision adaptation (repro.serve.repack) -------------
+
+    def request_swap(self, table, meta, *, arch: str | None = None):
+        """Queue an atomic packed-table swap (serving-time precision
+        adaptation, ``repro.serve.repack``).
+
+        The swap applies at the **next ``sched_step`` boundary**, never
+        mid-round: every dispatch reads an immutable ``bound`` tuple
+        snapshot, and the scheduler's per-round cell lookups all happen after
+        the swap point, so an in-flight coalesced batch can never observe a
+        torn table. The new ``table`` must match the live table's leaf
+        shapes/dtypes exactly (a capacity-conforming repack —
+        ``TableSwapper`` guarantees this), so re-binding goes through the
+        compiled ``in_shardings`` and **zero recompiles** occur."""
+        self._pending_swaps.append((arch, table, dict(meta)))
+
+    def live_packed_table(self, *, arch: str | None = None):
+        """The packed-table pytree currently bound into the score cells of
+        ``arch`` (host-side view from the cell definition) — the shape
+        template a repack must conform to."""
+        for reg in self._score.values():
+            if arch is None or reg.celldef.arch == arch:
+                return reg.celldef.bound[0]["embedding"]
+        raise ValueError(f"no packed score cell registered for arch={arch!r}")
+
+    def _apply_swaps(self):
+        while self._pending_swaps:
+            arch, table, meta = self._pending_swaps.pop(0)
+            self._swap_now(arch, table, meta)
+
+    def _swap_now(self, arch, table, meta):
+        swapped = False
+        for shape, reg in self._score.items():
+            if arch is not None and reg.celldef.arch != arch:
+                continue
+            self._score[shape] = self._rebind_score(reg, table)
+            swapped = True
+        for shape, tc in self._tiered.items():
+            if arch is not None and tc.reg.celldef.arch != arch:
+                continue
+            self._tiered[shape] = self._rebind_tiered(tc, table, meta)
+            swapped = True
+        if not swapped:
+            raise ValueError(
+                f"table swap targets no registered cell (arch={arch!r})")
+        self.swaps_applied += 1
+
+    @staticmethod
+    def _check_swap_layout(old, new, what: str):
+        """A swap must be invisible to the executable: identical pytree
+        structure, shapes and dtypes — otherwise the compiled input avals no
+        longer match and the call would have to recompile."""
+        def sig(tree):
+            return jax.tree.map(lambda x: (tuple(x.shape), str(x.dtype)),
+                                tree)
+        if sig(old) != sig(new):
+            raise ValueError(
+                f"table swap would change the compiled {what} layout — "
+                f"repack with row_capacities pinned to the live table "
+                f"(repro.serve.repack.subtable_capacities)")
+
+    def _rebind_score(self, reg: RegisteredCell, table) -> RegisteredCell:
+        celldef = reg.celldef
+        params = dict(celldef.bound[0])
+        self._check_swap_layout(params["embedding"], table, "packed-table")
+        params["embedding"] = table
+        celldef = celldef._replace(bound=(params,) + celldef.bound[1:])
+        # same executable, same shardings: the new leaves re-shard under the
+        # exact NamedShardings the cell compiled with (packed_table_pspecs)
+        bound0 = jax.device_put(params, reg.cell.in_shardings[0])
+        reg = reg._replace(celldef=celldef, bound=(bound0,) + reg.bound[1:])
+        if reg.lookup is not None:
+            lr = reg.lookup
+            lcd = lr.celldef._replace(bound=(table,) + lr.celldef.bound[1:])
+            lb0 = jax.device_put(table, lr.cell.in_shardings[0])
+            reg = reg._replace(lookup=lr._replace(
+                celldef=lcd, bound=(lb0,) + lr.bound[1:]))
+        return reg
+
+    def _rebind_tiered(self, tc: TieredCell, table, meta) -> TieredCell:
+        tc.store.refresh(table, meta)
+        reg = tc.reg
+        hot_i = len(reg.bound) - 1          # (params, state, buffers, hot)
+        self._check_swap_layout(reg.celldef.bound[hot_i], tc.store.hot,
+                                "hot-tier")
+        hot = jax.device_put(tc.store.hot, reg.cell.in_shardings[hot_i])
+        celldef = reg.celldef._replace(
+            bound=reg.celldef.bound[:hot_i] + (tc.store.hot,))
+        reg = reg._replace(celldef=celldef,
+                           bound=reg.bound[:hot_i] + (hot,))
+        return TieredCell(reg, tc.store, tc.offsets)
+
     # -- request lifecycle: submit / poll / drain ---------------------------
 
     def _timed_call(self, reg: RegisteredCell, *request):
@@ -263,7 +357,12 @@ class Engine:
         """Run one scheduling round (coalesce + dispatch each lane once; one
         decode token per active session). ``now=None`` uses the wall clock;
         an explicit ``now`` threads a virtual open-loop timeline through the
-        dispatch timestamps and returns the advanced cursor."""
+        dispatch timestamps and returns the advanced cursor.
+
+        Queued table swaps (``request_swap``) apply here, *before* the round
+        dispatches — the atomic swap point of the serving-time precision
+        adaptation path: every chunk of a round reads the same table."""
+        self._apply_swaps()
         return self.scheduler.step(now=now)
 
     def drain(self, *, now: float | None = None) -> float:

@@ -1,0 +1,294 @@
+"""Serving-time precision adaptation (repro.serve.repack).
+
+Covers the ISSUE-7 acceptance criteria: a live repack to a new assignment
+completes with **zero CellCache recompiles** (compile counters are flat
+across the swap), a repack to the identical assignment is **bit-exact**, a
+swap queued mid-stream never changes an already-dispatched chunk's result,
+the tiered store refreshes in place (hot-tier shapes pinned, counters
+cumulative), and a swapped table on a 2×2 mesh matches the single-device
+reference (multidevice-marked).
+"""
+import numpy as np
+import pytest
+
+from repro.cache import TieredTableStore
+from repro.core.inference import build_packed_table
+from repro.core.mpe import MPEConfig, make_groups
+from repro.core.packing import row_bytes
+from repro.data.synthetic import SyntheticCTR
+from repro.serve.repack import (RepackPlanner, TableSwapper,
+                                headroom_capacities, subtable_capacities)
+
+LAM = 3e-5
+
+
+# -- planner policy (no engine, no jax) --------------------------------------
+
+
+def _toy_planner(caps=None, freqs=None):
+    """4 groups of 3 features over the default width ladder."""
+    cfg = MPEConfig()
+    gof = np.repeat(np.arange(4, dtype=np.int32), 3)
+    meta = {"bits": cfg.bits, "d": 8, "n": 12}
+    if caps is None:
+        caps = {f"b{b}": 12 for b in cfg.bits if b != 0}
+    return RepackPlanner(meta, gof, caps, frequencies=freqs), cfg
+
+
+def test_planner_byte_math_and_identity():
+    planner, cfg = _toy_planner()
+    assign = np.array([5, 3, 1, 0], np.int32)
+    per_group = [row_bytes(8, cfg.bits[i]) if cfg.bits[i] else 0
+                 for i in assign]
+    assert planner.bytes_packed(assign) == 3 * sum(per_group)
+    assert planner.bucket_counts(assign).sum() == 12
+    # a budget at (or above) the current payload plans the identity
+    plan = planner.plan_budget(assign, planner.bytes_packed(assign))
+    assert plan.n_features_moved == 0
+    assert np.array_equal(plan.group_bits_idx, assign)
+    assert plan.bytes_packed == plan.bytes_before
+
+
+def test_planner_budget_demotes_coldest_first_within_capacity():
+    freqs = np.array([9.0] * 3 + [5.0] * 3 + [2.0] * 3 + [1.0] * 3)
+    planner, cfg = _toy_planner(freqs=freqs)
+    assign = np.full((4,), len(cfg.bits) - 1, np.int32)   # everyone widest
+    before = planner.bytes_packed(assign)
+    plan = planner.plan_budget(assign, before - 1)        # force a reduction
+    assert plan.bytes_packed <= before - 1
+    assert planner.capacity_ok(plan.group_bits_idx)
+    # packed widths quantize to whole uint32 words, so a notch may be free —
+    # the ordering property is what matters: the coldest group bears the
+    # deepest demotion, the hottest keeps the widest width
+    assert plan.group_bits_idx[3] == plan.group_bits_idx.min()
+    assert plan.group_bits_idx[0] == plan.group_bits_idx.max()
+
+
+def test_planner_respects_capacity_skips_full_buckets():
+    # intermediate buckets can hold nothing: demotions must bottom out at
+    # width 0 instead of overflowing a pinned subtable
+    cfg = MPEConfig()
+    caps = {f"b{b}": 12 for b in cfg.bits if b != 0}
+    for b in cfg.bits[1:-1]:
+        if b != 0:
+            caps[f"b{b}"] = 0
+    planner, _ = _toy_planner(caps=caps)
+    assign = np.full((4,), len(cfg.bits) - 1, np.int32)
+    plan = planner.plan_budget(assign, 0)
+    assert planner.capacity_ok(plan.group_bits_idx)
+    assert set(plan.group_bits_idx.tolist()) == {0}       # all-zero floor
+
+
+def test_planner_pressure_maps_hit_rate_to_budget():
+    planner, cfg = _toy_planner()
+    assign = np.full((4,), len(cfg.bits) - 1, np.int32)
+    # 100% hit rate -> identity plan
+    plan = planner.plan_pressure(assign, {"hot_lookups": 10, "cold_lookups": 0})
+    assert plan.n_features_moved == 0
+    # heavy misses -> shrunk payload
+    plan = planner.plan_pressure(assign, {"hot_lookups": 1, "cold_lookups": 9})
+    assert plan.bytes_packed < plan.bytes_before
+
+
+def test_planner_promote_spends_budget_hottest_first():
+    freqs = np.array([1.0] * 3 + [9.0] * 3 + [2.0] * 3 + [1.0] * 3)
+    planner, cfg = _toy_planner(freqs=freqs)
+    assign = np.zeros((4,), np.int32)
+    widest = len(cfg.bits) - 1
+    budget = 3 * row_bytes(8, cfg.bits[widest])           # room for one group
+    plan = planner.plan_promote(assign, bytes_budget=budget)
+    assert plan.bytes_packed <= budget
+    assert plan.group_bits_idx[1] > 0                     # the hottest group
+    assert planner.capacity_ok(plan.group_bits_idx)
+
+
+def test_headroom_capacities_round_and_cover_all_widths():
+    cfg = MPEConfig()
+    caps = headroom_capacities({"bits": cfg.bits, "d": 8, "n": 100},
+                               fraction=0.5, multiple=8)
+    assert set(caps) == {f"b{b}" for b in cfg.bits if b != 0}
+    assert all(v == 56 for v in caps.values())            # ceil(50 / 8) * 8
+
+
+def test_build_packed_table_rejects_overflowing_capacity():
+    cfg = MPEConfig()
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(16, 4)).astype(np.float32)
+    fbits = np.full((16,), len(cfg.bits) - 1, np.int32)
+    alpha = np.full((len(cfg.bits),), 0.05, np.float32)
+    beta = np.zeros((4,), np.float32)
+    caps = {f"b{b}": 8 for b in cfg.bits if b != 0}       # 16 rows won't fit
+    with pytest.raises(ValueError, match="pinned capacity"):
+        build_packed_table(emb, fbits, alpha, beta, cfg, row_capacities=caps)
+
+
+# -- live engine swaps --------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    """A trained packed DLRM served two ways (monolithic + tiered) with
+    repack tooling bound: (engine, store, res, planner, swapper, ids)."""
+    from repro.launch.serve import (build_engine, repack_tools,
+                                    train_packed_dlrm)
+    cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=(150, 100, 120), train_steps=10, train_batch=128,
+        d_embed=8, mlp_hidden=(16,), seed=4)
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                             freqs, 0.3)
+    engine = build_engine(cfg, params, state, buffers, p99_rows=64,
+                          bulk_rows=256, store=store)
+    planner, swapper = repack_tools(engine, res, freqs, lam=LAM)
+    ids = SyntheticCTR(spec._replace(batch_size=40)).batch(50_000)["ids"]
+    return engine, store, res, planner, swapper, ids
+
+
+def _restore(served):
+    """Swap the original assignment back in so tests stay order-independent."""
+    engine, _, res, _, swapper, _ = served
+    swapper.repack(np.asarray(res["feature_bits_idx"], np.int32))
+    engine.sched_step()
+
+
+def test_identical_assignment_repack_is_bit_exact(served):
+    engine, _, res, _, swapper, ids = served
+    base = engine.score(ids, return_logits=True)
+    base_t = engine.score_tiered(ids, return_logits=True)
+    c0 = engine.compile_count
+    swapper.repack(np.asarray(res["feature_bits_idx"], np.int32))
+    engine.sched_step()
+    assert engine.swaps_applied >= 1
+    assert engine.compile_count == c0
+    assert np.array_equal(engine.score(ids, return_logits=True), base)
+    assert np.array_equal(engine.score_tiered(ids, return_logits=True),
+                          base_t)
+
+
+def test_new_assignment_repack_zero_recompiles(served):
+    engine, _, res, planner, swapper, ids = served
+    base = engine.score(ids, return_logits=True)
+    c0 = engine.compile_count
+    gbits = np.asarray(res["group_bits"])
+    plan = planner.plan_budget(gbits,
+                               int(planner.bytes_packed(gbits) * 0.6))
+    assert plan.n_features_moved > 0
+    assert planner.capacity_ok(plan.group_bits_idx)
+    summary = swapper.repack(plan)
+    engine.sched_step()
+    out = engine.score(ids, return_logits=True)
+    assert engine.compile_count == c0                  # the tentpole invariant
+    assert not np.array_equal(out, base)               # precision really moved
+    assert summary["bytes_packed"] < summary["bytes_before"]
+    # monolithic and tiered lanes agree on the *new* table too
+    out_t = engine.score_tiered(ids, return_logits=True)
+    assert np.allclose(out, out_t, atol=1e-6)
+    _restore(served)
+
+
+def test_swap_applies_at_step_boundary_not_mid_round(served):
+    """A swap queued while requests are in flight lands between rounds: the
+    already-dispatched chunk keeps its old-table result, the next request
+    sees the new table, and no chunk ever mixes the two."""
+    engine, _, res, planner, swapper, ids = served
+    old_ref = engine.score(ids, return_logits=True)
+    gbits = np.asarray(res["group_bits"])
+    plan = planner.plan_budget(gbits,
+                               int(planner.bytes_packed(gbits) * 0.6))
+
+    t_a = engine.submit(ids)
+    engine.sched_step()                          # dispatches A (old table)
+    a_first = engine.poll(t_a)
+    swapper.repack(plan)                         # queued, not applied
+    t_b = engine.submit(ids)
+    engine.drain()                               # applies swap, dispatches B
+    b_out = engine.poll(t_b)
+    a_out = a_first if a_first is not None else engine.poll(t_a)
+    assert np.array_equal(a_out, old_ref)        # dispatched chunk untouched
+    new_ref = engine.score(ids, return_logits=True)
+    assert np.array_equal(b_out, new_ref)        # post-swap request: new table
+    assert not np.array_equal(a_out, b_out)
+    _restore(served)
+
+
+def test_tiered_refresh_pins_hot_shapes_and_keeps_counters(served):
+    engine, store, res, planner, swapper, ids = served
+    engine.score_tiered(ids)                     # populate counters
+    before = store.counters()
+    hot_shapes = {k: v.shape for k, v in store.hot["subtables"].items()}
+    gbits = np.asarray(res["group_bits"])
+    plan = planner.plan_budget(gbits,
+                               int(planner.bytes_packed(gbits) * 0.6))
+    swapper.repack(plan)
+    engine.sched_step()
+    after = store.counters()
+    assert {k: v.shape for k, v in store.hot["subtables"].items()} \
+        == hot_shapes                            # compiled hot layout survives
+    assert after["hot_lookups"] >= before["hot_lookups"]   # cumulative
+    assert after["prefetches"] >= before["prefetches"]
+    _restore(served)
+
+
+def test_refresh_rejects_changed_static_metadata(served):
+    _, store, res, _, _, _ = served
+    bad_meta = dict(res["packed_meta"], n=res["packed_meta"]["n"] + 1)
+    with pytest.raises(ValueError, match="static metadata"):
+        store.refresh(res["packed_table"], bad_meta)
+
+
+def test_swap_rejects_layout_change(served):
+    """A table packed to different capacities must be refused, not silently
+    recompiled."""
+    engine, _, res, _, swapper, _ = served
+    emb = res["final_params"]["embedding"]
+    fat = headroom_capacities(res["packed_meta"], fraction=0.9)
+    table, meta = build_packed_table(
+        np.asarray(emb["emb"]), np.asarray(res["feature_bits_idx"]),
+        np.asarray(emb["alpha"]), np.asarray(emb["beta"]),
+        MPEConfig(lam=LAM), row_capacities=fat)
+    engine.request_swap(table, meta)
+    with pytest.raises(ValueError, match="compiled .* layout"):
+        engine.sched_step()
+
+
+def test_swap_without_target_cell_raises():
+    from repro.serve import Engine
+    engine = Engine()
+    engine.request_swap({"subtables": {}}, {"bits": (0, 8), "d": 4, "n": 4})
+    with pytest.raises(ValueError, match="no registered cell"):
+        engine.sched_step()
+
+
+@pytest.mark.multidevice
+def test_swapped_table_matches_single_device_on_mesh():
+    """After a live repack on a 2×2 (data, model) mesh, the swapped subtables
+    re-shard through the compiled ``in_shardings`` (same
+    ``packed_table_pspecs``) and scores match the single-device engine that
+    applied the identical plan."""
+    from repro.dist import make_device_mesh
+    from repro.launch.serve import (build_engine, repack_tools,
+                                    train_packed_dlrm)
+    cfg, params, state, buffers, spec, res = train_packed_dlrm(
+        field_vocabs=(150, 100, 120), train_steps=10, train_batch=128,
+        d_embed=8, mlp_hidden=(16,), seed=4)
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    mesh = make_device_mesh((2, 2), ("data", "model"))
+    engines = [build_engine(cfg, dict(params), state, buffers, p99_rows=64,
+                            bulk_rows=256),
+               build_engine(cfg, dict(params), state, buffers, p99_rows=64,
+                            bulk_rows=256, mesh=mesh)]
+    gbits = np.asarray(res["group_bits"])
+    plan = None
+    for eng in engines:
+        planner, swapper = repack_tools(eng, res, freqs, lam=LAM)
+        if plan is None:
+            plan = planner.plan_budget(gbits,
+                                       int(planner.bytes_packed(gbits) * 0.6))
+        swapper.repack(plan)
+        eng.sched_step()
+    ids = SyntheticCTR(spec._replace(batch_size=40)).batch(50_000)["ids"]
+    c_mesh = engines[1].compile_count
+    ref = engines[0].score(ids, return_logits=True)
+    got = engines[1].score(ids, return_logits=True)
+    assert engines[1].compile_count == c_mesh
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
