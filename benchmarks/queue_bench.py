@@ -1,6 +1,6 @@
 """Request-lifecycle benchmark → BENCH_queue.json (queue/scheduler perf point).
 
-Two experiments over the admission-queue → coalescing-scheduler →
+Three experiments over the admission-queue → coalescing-scheduler →
 compiled-cell stack:
 
   1. **Open-loop QPS sweep** — seeded Poisson arrivals at each offered rate
@@ -9,7 +9,13 @@ compiled-cell stack:
      latency, the queue/assembly/compute split, goodput, shed rate and
      per-cell occupancy. Each point gets a fresh engine sharing the warm
      `CellCache`, so sweep points are independent and recompiles stay zero.
-  2. **Continuous vs restart decode** — the same LM and prompt set generated
+  2. **Two-tenant skewed-priority sweep** — `run_open_loop_mix` merges a
+     latency tenant (priority 0, deadline) and a bulk tenant (priority 1,
+     queue-share quota, no deadline) at each total offered rate, through a
+     watermark-shedding queue. Per point: per-stream goodput/shed and the
+     per-lane (`kind:p<priority>`) latency split — the multi-tenant SLO
+     numbers `engine.request_summary(by=...)` surfaces.
+  3. **Continuous vs restart decode** — the same LM and prompt set generated
      (a) through the continuous-batching decode lane (sequences join/leave a
      slot-pooled KV cache between steps) and (b) per-request through the
      classic decode cell (one sequence at a time, batch slots idle). Reports
@@ -33,19 +39,20 @@ import jax
 import numpy as np
 
 from repro.data.synthetic import SyntheticCTR
-from repro.launch.serve import build_engine, run_open_loop, train_packed_dlrm
-from repro.serve import (Engine, LatencyStats, RequestStats, lm_decode_cell,
-                         lm_decode_slotted_cell)
+from repro.launch.serve import (build_engine, run_open_loop,
+                                run_open_loop_mix, train_packed_dlrm)
+from repro.serve import (Engine, LatencyStats, RequestStats, TenantQuota,
+                         lm_decode_cell, lm_decode_slotted_cell)
 
 FULL = dict(field_vocabs=(3000, 2000, 1500, 1000), train_steps=120,
             requests=120, batch=60, p99_rows=512, bulk_rows=4096,
             qps_sweep=(50.0, 200.0, 800.0), deadline_ms=2000.0,
-            queue_capacity=256,
+            queue_capacity=256, mix_sweep=(100.0, 800.0),
             lm=dict(slots=4, max_len=48, prompts=24, prompt_len=8, max_new=16))
 SMOKE = dict(field_vocabs=(600, 400, 500), train_steps=30,
              requests=40, batch=40, p99_rows=128, bulk_rows=1024,
              qps_sweep=(50.0, 400.0), deadline_ms=2000.0,
-             queue_capacity=256,
+             queue_capacity=256, mix_sweep=(100.0, 600.0),
              lm=dict(slots=2, max_len=24, prompts=8, prompt_len=4, max_new=8))
 
 
@@ -80,6 +87,49 @@ def sweep_point(base_engine, cfg, spec, qps: float, model_args) -> dict:
         "assembly_p50_ms": rs["assembly"]["p50_ms"],
         "compute_p50_ms": rs["compute"]["p50_ms"],
         "occupancy": {cell: v["occupancy"] for cell, v in occ.items()},
+    }
+
+
+def mix_point(base_engine, cfg, spec, qps: float, model_args) -> dict:
+    """One two-tenant point at a total offered rate ``qps``: a latency
+    tenant (priority 0, deadline) and a bulk tenant (priority 1, queue-share
+    quota, no deadline) interleave through a watermark-shedding queue."""
+    engine = Engine(mesh=base_engine.mesh, cache=base_engine.cache,
+                    queue_capacity=cfg["queue_capacity"],
+                    quotas={"bulk": TenantQuota(
+                        max_queued=cfg["queue_capacity"] // 4,
+                        max_inflight_rows=None)},
+                    shed_watermark=0.75)
+    engine.register_packed_model(*model_args,
+                                 shapes={"serve_p99": cfg["p99_rows"],
+                                         "serve_bulk": cfg["bulk_rows"]})
+    req_ds = SyntheticCTR(spec._replace(batch_size=cfg["batch"]))
+    engine.score(req_ds.batch(19_999)["ids"])       # warm dispatch path
+    engine.stats = LatencyStats()
+    engine.rstats = RequestStats()
+    n = cfg["requests"]
+    streams = [
+        {"tenant": "latency", "qps": qps * 0.3, "n_requests": n // 2,
+         "priority": 0, "deadline_ms": cfg["deadline_ms"]},
+        {"tenant": "bulk", "qps": qps * 0.7, "n_requests": n - n // 2,
+         "priority": 1},
+    ]
+    mix = run_open_loop_mix(engine,
+                            lambda i, _batch: req_ds.batch(20_000 + i)["ids"],
+                            streams, seed=0)
+    per_lane = {
+        lane: {"count": s["count"],
+               "latency_p50_ms": s["latency"]["p50_ms"],
+               "latency_p99_ms": s["latency"]["p99_ms"],
+               "queue_p50_ms": s["queue"]["p50_ms"]}
+        for lane, s in engine.request_summary(by="lane").items()}
+    qc = engine.counters()["queue"]
+    return {
+        "offered_qps": qps,
+        "per_stream": mix["per_stream"],
+        "per_lane": per_lane,
+        "shed": {k: qc[k] for k in ("shed_full", "shed_deadline",
+                                    "shed_quota", "shed_load")},
     }
 
 
@@ -155,6 +205,15 @@ def run(cfg: dict) -> dict:
               f"p50={p['latency_p50_ms']:.2f}ms p99={p['latency_p99_ms']:.2f}ms "
               f"shed_rate={p['shed_rate']:.2f}")
 
+    tenants = [mix_point(base, cfg, spec, q, model_args)
+               for q in cfg["mix_sweep"]]
+    for p in tenants:
+        lat = p["per_stream"]["latency"]
+        blk = p["per_stream"]["bulk"]
+        print(f"[queue_bench] mix qps={p['offered_qps']:.0f} "
+              f"latency: goodput={lat['goodput_qps']:.1f} shed={lat['shed']} "
+              f"| bulk: goodput={blk['goodput_qps']:.1f} shed={blk['shed']}")
+
     decode = decode_experiment(cfg)
     print(f"[queue_bench] decode: continuous={decode['continuous_tok_s']:.1f} "
           f"tok/s restart={decode['restart_tok_s']:.1f} tok/s "
@@ -168,6 +227,7 @@ def run(cfg: dict) -> dict:
                 "platform": platform.platform()},
         "train_s": round(train_s, 2),
         "points": points,
+        "tenants": tenants,
         "decode": decode,
         "unix_time": int(time.time()),
     }

@@ -83,7 +83,9 @@ def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
 def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
                  bulk_rows: int = 4096, lookup_split: bool = True,
                  store=None, mesh=None, shard_lookup: bool | None = None,
-                 queue_capacity: int = 1024) -> Engine:
+                 queue_capacity: int = 1024, quotas=None,
+                 shed_watermark: float = 1.0,
+                 coalesce_window_ms: float = 0.0, clock=None) -> Engine:
     """An engine with the standard cell-shape registry for one DLRM table.
 
     With a ``repro.cache.TieredTableStore`` in ``store``, the same shapes are
@@ -91,9 +93,13 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
     served through ``engine.score_tiered``. A multi-device ``mesh`` compiles
     every cell against it; ``shard_lookup`` (default: on exactly when the
     mesh has >1 device) routes the packed/hot gathers through the
-    ``shard_map`` wrappers of ``repro.dist.shard``."""
+    ``shard_map`` wrappers of ``repro.dist.shard``. ``quotas`` /
+    ``shed_watermark`` / ``coalesce_window_ms`` / ``clock`` pass through to
+    the engine's multi-tenant admission and scheduling policy."""
     from repro.models.dlrm import DLRM
-    engine = Engine(mesh=mesh, queue_capacity=queue_capacity)
+    engine = Engine(mesh=mesh, queue_capacity=queue_capacity, quotas=quotas,
+                    shed_watermark=shed_watermark,
+                    coalesce_window_ms=coalesce_window_ms, clock=clock)
     if shard_lookup is None:
         shard_lookup = engine.mesh.size > 1
     engine.register_packed_model(
@@ -161,16 +167,91 @@ def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
             tickets.append(t)
             i += 1
         now = engine.sched_step(now=now)
-    from repro.serve.queue import DONE, SHED
+        if (not engine.scheduler._progress and i < n_requests
+                and float(arrivals[i]) < now):
+            # the round held for its coalescing window and jumped the cursor
+            # past the next arrival — cap the jump so that arrival gets to
+            # join the held batch before the window decision is remade
+            now = float(arrivals[i])
+    from repro.serve.queue import DONE, FAILED, SHED
     completed = sum(1 for t in tickets
                     if t is not None and engine._requests[t].status == DONE)
     shed += sum(1 for t in tickets
                 if t is not None and engine._requests[t].status == SHED)
+    failed = sum(1 for t in tickets
+                 if t is not None and engine._requests[t].status == FAILED)
     makespan = max(now, float(arrivals[-1])) if n_requests else now
     return {"tickets": tickets, "makespan_s": makespan,
             "offered_qps": qps,
             "goodput_qps": completed / makespan if makespan > 0 else 0.0,
-            "completed": completed, "shed": shed}
+            "completed": completed, "shed": shed, "failed": failed}
+
+
+def run_open_loop_mix(engine, make_ids, streams, *, seed: int = 0,
+                      kind: str = "score") -> dict:
+    """Multi-tenant open-loop replay: merge several Poisson request streams
+    onto one virtual timeline.
+
+    Each stream is a dict: ``{"tenant": str, "qps": float, "n_requests":
+    int, "priority": int = 0, "deadline_ms": float | None = None,
+    "batch": int | None = None}``. Arrivals across streams interleave in
+    timestamp order and every request is submitted with its stream's
+    tenant/priority/deadline — the two-tenant skewed-priority sweep
+    ``queue_bench`` reports is exactly this with one latency-sensitive and
+    one bulk stream. ``make_ids(i, batch)`` makes the i-th request's id
+    batch (``batch=None`` means the stream's default size).
+
+    Returns {makespan_s, per_stream: {tenant: {offered_qps, completed,
+    shed, failed, goodput_qps}}}; per-lane/per-tenant percentiles live in
+    ``engine.request_summary(by=...)``.
+    """
+    rng = np.random.default_rng(seed)
+    events = []     # (arrival_t, global_idx, stream)
+    gi = 0
+    for s in streams:
+        arr = np.cumsum(rng.exponential(1.0 / s["qps"],
+                                        size=s["n_requests"]))
+        for t in arr:
+            events.append((float(t), gi, s))
+            gi += 1
+    events.sort(key=lambda e: (e[0], e[1]))
+    tickets = {id(s): [] for s in streams}
+    submitted_shed = {id(s): 0 for s in streams}
+    now, i = 0.0, 0
+    while i < len(events) or engine.scheduler.busy:
+        if not engine.scheduler.busy and i < len(events) \
+                and events[i][0] > now:
+            now = events[i][0]
+        while i < len(events) and events[i][0] <= now:
+            t_arr, idx, s = events[i]
+            t = engine.submit(make_ids(idx, s.get("batch")), kind=kind,
+                              now=t_arr, deadline_ms=s.get("deadline_ms"),
+                              tenant=s.get("tenant", "default"),
+                              priority=s.get("priority", 0))
+            if t is None:
+                submitted_shed[id(s)] += 1
+            tickets[id(s)].append(t)
+            i += 1
+        now = engine.sched_step(now=now)
+        if (not engine.scheduler._progress and i < len(events)
+                and events[i][0] < now):
+            now = events[i][0]
+    from repro.serve.queue import DONE, FAILED, SHED
+    makespan = max(now, events[-1][0]) if events else now
+    per_stream = {}
+    for s in streams:
+        stats = {DONE: 0, SHED: submitted_shed[id(s)], FAILED: 0}
+        for t in tickets[id(s)]:
+            if t is None:
+                continue
+            st = engine._requests[t].status
+            if st in stats:
+                stats[st] += 1
+        per_stream[s.get("tenant", "default")] = {
+            "offered_qps": s["qps"], "completed": stats[DONE],
+            "shed": stats[SHED], "failed": stats[FAILED],
+            "goodput_qps": (stats[DONE] / makespan if makespan > 0 else 0.0)}
+    return {"makespan_s": makespan, "per_stream": per_stream}
 
 
 def main(argv=None):
@@ -198,6 +279,10 @@ def main(argv=None):
                          "queued past it are shed instead of dispatched")
     ap.add_argument("--queue-capacity", type=int, default=1024,
                     help="admission-queue bound (reject-on-full shedding)")
+    ap.add_argument("--coalesce-window-ms", type=float, default=0.0,
+                    help="max-wait coalescing window: hold a lane's light "
+                         "load up to this long for a fuller bucket (0 "
+                         "dispatches immediately)")
     ap.add_argument("--seed", type=int, default=0,
                     help="seed for the open-loop inter-arrival times")
     ap.add_argument("--hot-frac", type=float, default=None,
@@ -263,7 +348,8 @@ def main(argv=None):
     engine = build_engine(cfg, params, state, buffers,
                           p99_rows=args.p99_rows, bulk_rows=args.bulk_rows,
                           store=store, mesh=mesh,
-                          queue_capacity=args.queue_capacity)
+                          queue_capacity=args.queue_capacity,
+                          coalesce_window_ms=args.coalesce_window_ms)
     print(f"[serve] registered cells: "
           f"{dict(sorted(engine.registered_shapes.items()))} "
           f"(compiles={engine.compile_count})")

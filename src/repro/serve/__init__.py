@@ -9,11 +9,17 @@ The request-lifecycle stack, composable bottom-up:
                   registered cell shapes (pad-to-shape + validity mask);
                   ``pack`` coalesces many requests into shared chunks whose
                   ``Span``s scatter outputs back per requester.
-  ``queue``     — AdmissionQueue: the bounded arrival edge — deadlines,
-                  reject-on-full shedding, arrival/dispatch timestamps.
-  ``scheduler`` — Scheduler: drains the queue into coalesced cell dispatches;
+  ``queue``     — AdmissionQueue: the bounded multi-lane arrival edge —
+                  priority lanes with EDF dispatch order, per-tenant quotas
+                  (``TenantQuota``), load-adaptive + deadline shedding, and
+                  per-kind/per-tenant counters.
+  ``scheduler`` — Scheduler: drains the queue into coalesced cell dispatches
+                  (with an optional max-wait coalescing window) and isolates
+                  dispatch faults to the requests riding the failed chunk;
                   ``DecodeSession`` runs continuous-batching LM decode over a
                   slot-pooled persistent KV cache.
+  ``clock``     — ManualClock: injectable time source (``Engine(clock=...)``)
+                  for wall-clock-independent lifecycle tests.
   ``engine``    — Engine: ``submit``/``poll``/``drain`` lifecycle with
                   ``score`` / ``retrieve`` / ``decode`` preserved as thin
                   synchronous wrappers; per-cell latency percentiles in the
@@ -38,8 +44,10 @@ from repro.serve.cells import (ServeCellDef, baseline_score_cell,
                                packed_lookup_cell, packed_score_cell,
                                packed_score_step, tiered_score_cell,
                                two_tower_retrieval_cell)
+from repro.serve.clock import ManualClock
 from repro.serve.engine import Engine
-from repro.serve.queue import AdmissionQueue, Request
+from repro.serve.queue import (AdmissionQueue, Request, RequestFailedError,
+                               TenantQuota)
 from repro.serve.repack import (RepackPlan, RepackPlanner, TableSwapper,
                                 headroom_capacities, subtable_capacities)
 from repro.serve.scheduler import DecodeSession, Scheduler
@@ -48,7 +56,8 @@ from repro.serve.stats import LatencyStats, RequestStats
 __all__ = [
     "CellCache", "CellKey", "CompiledCell", "mesh_signature",
     "Chunk", "Span", "RequestBatcher", "LatencyStats", "RequestStats",
-    "AdmissionQueue", "Request", "Scheduler", "DecodeSession",
+    "AdmissionQueue", "Request", "TenantQuota", "RequestFailedError",
+    "ManualClock", "Scheduler", "DecodeSession",
     "ServeCellDef", "baseline_score_cell", "packed_score_cell",
     "packed_score_step",
     "packed_lookup_cell", "tiered_score_cell", "two_tower_retrieval_cell",

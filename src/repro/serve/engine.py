@@ -38,7 +38,8 @@ from repro.serve.batcher import RequestBatcher
 from repro.serve.cache import CellCache, CompiledCell
 from repro.serve.cells import (ServeCellDef, packed_lookup_cell,
                                packed_score_cell, tiered_score_cell)
-from repro.serve.queue import DONE, SHED, AdmissionQueue
+from repro.serve.queue import (DONE, FAILED, SHED, AdmissionQueue,
+                               RequestFailedError, TenantQuota)
 from repro.serve.scheduler import Scheduler
 from repro.serve.stats import LatencyStats, RequestStats
 
@@ -75,13 +76,22 @@ class Engine:
     """
 
     def __init__(self, mesh=None, cache: CellCache | None = None,
-                 queue_capacity: int = 1024):
+                 queue_capacity: int = 1024, *,
+                 quotas: dict[str, TenantQuota] | None = None,
+                 shed_watermark: float = 1.0,
+                 coalesce_window_ms: float = 0.0,
+                 clock=None):
         self.mesh = mesh if mesh is not None else host_mesh()
         self.cache = cache if cache is not None else CellCache(self.mesh)
+        # every timestamp in the lifecycle flows from this one callable —
+        # inject repro.serve.clock.ManualClock for deterministic tests
+        self._clock = clock if clock is not None else time.perf_counter
         self.stats = LatencyStats()
         self.rstats = RequestStats()
-        self.queue = AdmissionQueue(queue_capacity)
-        self.scheduler = Scheduler(self)
+        self.queue = AdmissionQueue(queue_capacity, quotas=quotas,
+                                    shed_watermark=shed_watermark)
+        self.scheduler = Scheduler(self,
+                                   coalesce_window_ms=coalesce_window_ms)
         self._requests: dict[int, object] = {}          # ticket -> Request
         self._score: dict[str, RegisteredCell] = {}     # bucket name -> cell
         self._score_batcher = RequestBatcher()
@@ -277,22 +287,26 @@ class Engine:
     # -- request lifecycle: submit / poll / drain ---------------------------
 
     def _timed_call(self, reg: RegisteredCell, *request):
-        t0 = time.perf_counter()
+        t0 = self._clock()
         out = reg.cell.compiled(*reg.bound, *request)
         # deliberate timing barrier: wall-clock per call is the product here
         jax.block_until_ready(out)  # staticcheck: ignore[RL403]
-        return out, (time.perf_counter() - t0) * 1e3
+        return out, (self._clock() - t0) * 1e3
 
     def submit(self, ids, *, kind: str = "score",
                deadline_ms: float | None = None, now: float | None = None,
-               overlap: bool = True) -> int | None:
+               overlap: bool = True, tenant: str = "default",
+               priority: int = 0) -> int | None:
         """Admit an (n, F) scoring request into the queue -> ticket, or None
-        when the bounded queue sheds it (reject-on-full; counted).
+        when the admission policy sheds it (queue full, load watermark, or
+        tenant queue-share quota; all counted per kind and tenant).
 
         ``kind`` routes the request to a lane: ``"score"`` (packed cells) or
         ``"tiered"`` (hot/cold store cells, where ``overlap`` controls the
         one-chunk-ahead cold-fill staging) — decode requests go through
-        ``submit_decode``. ``now`` overrides the arrival timestamp for
+        ``submit_decode``. ``tenant``/``priority`` place the request in the
+        multi-tenant scheduling lanes (priority 0 is most urgent; dispatch is
+        EDF within a lane). ``now`` overrides the arrival timestamp for
         open-loop replay; ``deadline_ms`` is relative to it — requests still
         queued past their deadline are shed at drain."""
         if kind not in ("score", "tiered"):
@@ -302,18 +316,20 @@ class Engine:
         ids = np.asarray(ids, np.int32)
         req = self.queue.submit(
             kind, ids, ids.shape[0],
-            now=time.perf_counter() if now is None else now,
+            now=self._clock() if now is None else now,
             deadline_ms=deadline_ms,
-            meta={"overlap": overlap} if kind == "tiered" else None)
+            meta={"overlap": overlap} if kind == "tiered" else None,
+            tenant=tenant, priority=priority)
         if req is None:
-            self.rstats.record_shed(kind)
+            self.rstats.record_shed(kind, tenant=tenant)
             return None
         self._requests[req.ticket] = req
         return req.ticket
 
     def submit_decode(self, prompt, max_new: int, *, arch: str | None = None,
                       deadline_ms: float | None = None,
-                      now: float | None = None) -> int | None:
+                      now: float | None = None, tenant: str = "default",
+                      priority: int = 0) -> int | None:
         """Admit an LM generation request (prompt replay + ``max_new`` greedy
         tokens) into the continuous-batching decode lane -> ticket, or None
         when shed. Requires a registered ``lm_decode_slotted_cell``; the
@@ -327,10 +343,10 @@ class Engine:
                 f"the cell's max_len={session.max_len}")
         req = self.queue.submit(
             "decode", (prompt, int(max_new), arch), 1,
-            now=time.perf_counter() if now is None else now,
-            deadline_ms=deadline_ms)
+            now=self._clock() if now is None else now,
+            deadline_ms=deadline_ms, tenant=tenant, priority=priority)
         if req is None:
-            self.rstats.record_shed("decode")
+            self.rstats.record_shed("decode", tenant=tenant)
             return None
         self._requests[req.ticket] = req
         return req.ticket
@@ -338,20 +354,45 @@ class Engine:
     def poll(self, ticket: int):
         """The completed result for ``ticket`` — scored requests return the
         (n,) logits, decode requests the generated tokens — or None while the
-        request is still queued/in flight. Raises on a shed ticket.
+        request is still queued/in flight. Raises ``RuntimeError`` on a shed
+        ticket and ``RequestFailedError`` on a ticket whose dispatch raised.
 
-        A finished ticket is consumed by its poll (its record is dropped so a
-        long-running process doesn't accumulate per-request state); polling
-        it again raises KeyError."""
+        A finished ticket (done, shed or failed) is consumed by its poll
+        (its record is dropped so a long-running process doesn't accumulate
+        per-request state); polling it again raises KeyError."""
         req = self._requests[ticket]
         if req.status == SHED:
             del self._requests[ticket]
             raise RuntimeError(
                 f"request {ticket} was shed (deadline passed while queued)")
+        if req.status == FAILED:
+            del self._requests[ticket]
+            raise RequestFailedError(
+                f"request {ticket} failed in dispatch: {req.error}")
         if req.status != DONE:
             return None
         del self._requests[ticket]
         return req.result
+
+    def try_poll(self, ticket: int) -> dict:
+        """Non-raising poll for harness code (the socket server): always
+        returns ``{"status": ...}`` — ``pending`` (ticket still in flight),
+        ``done`` (+ ``result``), ``shed``, ``failed`` (+ ``error``), or
+        ``unknown`` (never issued, or already consumed). Terminal tickets
+        are consumed exactly like ``poll``."""
+        req = self._requests.get(ticket)
+        if req is None:
+            return {"status": "unknown"}
+        if req.status == SHED:
+            del self._requests[ticket]
+            return {"status": "shed"}
+        if req.status == FAILED:
+            del self._requests[ticket]
+            return {"status": "failed", "error": req.error}
+        if req.status != DONE:
+            return {"status": "pending"}
+        del self._requests[ticket]
+        return {"status": "done", "result": req.result}
 
     def sched_step(self, *, now: float | None = None) -> float:
         """Run one scheduling round (coalesce + dispatch each lane once; one
@@ -371,7 +412,7 @@ class Engine:
         cursor = now
         while self.scheduler.busy:
             cursor = self.sched_step(now=cursor)
-        return cursor if cursor is not None else time.perf_counter()
+        return cursor if cursor is not None else self._clock()
 
     # -- synchronous wrappers (submit + drain + poll) -----------------------
 
@@ -523,11 +564,14 @@ class Engine:
 
     def counters(self) -> dict:
         """Cell-cache counters plus per-cell occupancy (valid rows / padded
-        rows over every dispatch — the coalescing win) and the admission
-        queue's depth/shed counters."""
+        rows over every dispatch — the coalescing win), the admission
+        queue's depth/shed counters (per kind and per tenant), and goodput —
+        completed-request counts — split by lane and by tenant."""
         out = dict(self.cache.counters())
         out["occupancy"] = self.stats.occupancy()
         out["queue"] = self.queue.counters()
+        out["goodput"] = {"by_lane": self.rstats.lane_counts(),
+                          "by_tenant": self.rstats.tenant_counts()}
         return out
 
     def summary(self, *, skip_warmup: int = 0) -> dict:
@@ -535,7 +579,14 @@ class Engine:
         per-cell ``occupancy`` merged in where dispatches recorded it."""
         return self.stats.summary(skip_warmup=skip_warmup)
 
-    def request_summary(self, *, skip_warmup: int = 0) -> dict:
-        """Per-kind request breakdown: end-to-end latency plus the three-way
-        queue-wait / batch-assembly / compute split."""
-        return self.rstats.summary(skip_warmup=skip_warmup)
+    def request_summary(self, *, skip_warmup: int = 0,
+                        by: str = "kind") -> dict:
+        """Per-request breakdown: end-to-end latency plus the three-way
+        queue-wait / batch-assembly / compute split. ``by`` groups the
+        records: ``"kind"`` (back-compat shape), ``"lane"``
+        (``kind:p<priority>``) or ``"tenant"`` (with per-tenant shed/failed
+        counts)."""
+        summaries = {"kind": self.rstats.summary,
+                     "lane": self.rstats.lane_summary,
+                     "tenant": self.rstats.tenant_summary}
+        return summaries[by](skip_warmup=skip_warmup)

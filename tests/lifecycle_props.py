@@ -1,0 +1,192 @@
+"""Shared property checks for the multi-lane admission queue.
+
+Plain functions, no hypothesis import: the exact same driver + invariants
+run twice —
+
+  - under **hypothesis** in ``tests/test_scheduler_props.py`` (dev envs and
+    CI, where requirements-dev.txt installs it), with minimized
+    counterexamples;
+  - under the **seeded-numpy sweeps** in ``tests/test_queue.py`` (always-on
+    tier-1), so the invariant logic itself is exercised even where
+    hypothesis is absent.
+
+``drive_queue`` replays a randomized submit/take/complete stream against an
+``AdmissionQueue`` on a virtual timeline and returns a trace; the ``check_*``
+functions assert the scheduler contract over it: no dropped or duplicated
+tickets, EDF dispatch order within a lane, per-tenant quota ceilings never
+exceeded, counters consistent with the trace — and ``check_fifo_identity``:
+with one tenant, priority 0 and no deadlines the multi-lane queue dispatches
+in exactly the single-lane FIFO order.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.serve.queue import SHED, AdmissionQueue, TenantQuota
+
+KINDS = ("score", "tiered")
+
+
+def random_stream(rng, n_events: int) -> list[dict]:
+    """A random submit-stream spec from a ``numpy.random.Generator`` —
+    mirrors the hypothesis strategy in ``test_scheduler_props.py``."""
+    specs = []
+    for _ in range(n_events):
+        specs.append({
+            "kind": str(rng.choice(KINDS)),
+            "n_rows": int(rng.integers(1, 41)),
+            "tenant": str(rng.choice(["a", "b", "c"])),
+            "priority": int(rng.integers(0, 3)),
+            "deadline_ms": (None if rng.random() < 0.5
+                            else float(rng.integers(1, 500))),
+            "dt": float(rng.random() * 0.05),
+        })
+    return specs
+
+
+def random_config(rng) -> dict:
+    """A random queue configuration. ``max_inflight_rows`` stays ≥ the
+    largest request ``random_stream`` emits (40) so no submit is rejected
+    outright for exceeding its tenant's whole budget."""
+    quotas = {}
+    if rng.random() < 0.7:
+        quotas["a"] = TenantQuota(max_queued=int(rng.integers(1, 6)),
+                                  max_inflight_rows=int(rng.integers(40, 200)))
+    if rng.random() < 0.4:
+        quotas["b"] = TenantQuota(max_queued=None,
+                                  max_inflight_rows=int(rng.integers(40, 120)))
+    return {"capacity": int(rng.integers(4, 33)),
+            "quotas": quotas or None,
+            "shed_watermark": float(rng.choice([1.0, 0.75, 0.5])),
+            "take_every": int(rng.integers(1, 5)),
+            "complete_frac": float(rng.random())}
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+def drive_queue(specs: list[dict], cfg: dict) -> dict:
+    """Replay ``specs`` against a fresh queue: submit each event, drain both
+    kinds every ``take_every`` submits, complete (release) a
+    ``complete_frac`` share of the taken requests between drains, then
+    drain to empty. Returns the trace the ``check_*`` functions consume."""
+    q = AdmissionQueue(cfg["capacity"], quotas=cfg.get("quotas"),
+                      shed_watermark=cfg.get("shed_watermark", 1.0))
+    admitted: list = []
+    shed_at_submit = 0
+    batches: list[tuple[str, list]] = []
+    inflight: list = []
+    peak_inflight: dict[str, int] = {}
+    now = 0.0
+    for i, s in enumerate(specs):
+        now += s["dt"]
+        req = q.submit(s["kind"], i, s["n_rows"], now=now,
+                       deadline_ms=s["deadline_ms"], tenant=s["tenant"],
+                       priority=s["priority"])
+        if req is None:
+            shed_at_submit += 1
+        else:
+            admitted.append(req)
+        if (i + 1) % cfg["take_every"] == 0:
+            now += 0.01
+            _drain_once(q, now, batches, inflight, peak_inflight)
+            _complete(q, inflight, cfg["complete_frac"])
+    # drain to empty: release everything between rounds so quota-deferred
+    # requests make progress
+    rounds = 0
+    while len(q):
+        now += 0.05
+        _drain_once(q, now, batches, inflight, peak_inflight)
+        _complete(q, inflight, 1.0)
+        rounds += 1
+        assert rounds < 10_000, "queue failed to drain (stuck requests)"
+    _complete(q, inflight, 1.0)
+    return {"queue": q, "admitted": admitted, "batches": batches,
+            "shed_at_submit": shed_at_submit,
+            "peak_inflight": peak_inflight}
+
+
+def _drain_once(q, now, batches, inflight, peak_inflight):
+    for kind in KINDS:
+        ready, _expired = q.take(kind, now=now)
+        if ready:
+            batches.append((kind, ready))
+            inflight.extend(ready)
+        rows: dict[str, int] = {}
+        for r in inflight:
+            rows[r.tenant] = rows.get(r.tenant, 0) + r.n_rows
+        for tenant, n in rows.items():
+            peak_inflight[tenant] = max(peak_inflight.get(tenant, 0), n)
+
+
+def _complete(q, inflight, frac: float):
+    k = math.ceil(len(inflight) * frac)
+    for req in inflight[:k]:
+        q.release(req)
+    del inflight[:k]
+
+
+# ---------------------------------------------------------------------------
+# the invariants
+# ---------------------------------------------------------------------------
+
+def check_no_drop_no_dup(result: dict):
+    """Every admitted ticket is dispatched exactly once or deadline-shed
+    exactly once — none lost, none duplicated, none left queued."""
+    dispatched = [r for _, batch in result["batches"] for r in batch]
+    tickets = [r.ticket for r in dispatched]
+    assert len(tickets) == len(set(tickets)), "ticket dispatched twice"
+    expired = {r.ticket for r in result["admitted"] if r.status == SHED}
+    assert not (set(tickets) & expired), "ticket both dispatched and shed"
+    assert set(tickets) | expired == {r.ticket for r in result["admitted"]}
+    assert len(result["queue"]) == 0
+
+
+def check_edf_order(result: dict):
+    """Within every drained batch: priority lanes in order, EDF inside a
+    lane, ticket (arrival) order on ties."""
+    for _kind, batch in result["batches"]:
+        keys = [(r.priority,
+                 math.inf if r.deadline_t is None else r.deadline_t,
+                 r.ticket) for r in batch]
+        assert keys == sorted(keys), f"EDF order violated: {keys}"
+
+
+def check_quota_ceilings(result: dict, quotas):
+    """A tenant's taken-but-unreleased rows never exceed its
+    ``max_inflight_rows`` at any point in the trace."""
+    for tenant, quota in (quotas or {}).items():
+        if quota.max_inflight_rows is not None:
+            peak = result["peak_inflight"].get(tenant, 0)
+            assert peak <= quota.max_inflight_rows, \
+                f"tenant {tenant}: {peak} in-flight rows > quota " \
+                f"{quota.max_inflight_rows}"
+
+
+def check_counters_consistent(result: dict):
+    """The queue's counters reconcile with the trace, and every total
+    equals the sum of its per-kind split and of its per-tenant split."""
+    c = result["queue"].counters()
+    assert c["admitted"] == len(result["admitted"])
+    assert c["shed_deadline"] == \
+        sum(1 for r in result["admitted"] if r.status == SHED)
+    assert (c["shed_full"] + c["shed_quota"] + c["shed_load"]
+            == result["shed_at_submit"])
+    for key in ("admitted", "shed_full", "shed_deadline", "shed_quota",
+                "shed_load"):
+        assert c[key] == sum(rec[key] for rec in c["per_kind"].values())
+        assert c[key] == sum(rec[key] for rec in c["per_tenant"].values())
+
+
+def check_fifo_identity(sizes: list[int]):
+    """One tenant, priority 0, no deadlines, no quotas: the multi-lane
+    queue drains in exactly the single-lane FIFO (ticket) order."""
+    q = AdmissionQueue(capacity=len(sizes) + 1)
+    reqs = [q.submit("score", i, n, now=float(i))
+            for i, n in enumerate(sizes)]
+    ready, expired = q.take("score", now=float(len(sizes)) + 1.0)
+    assert not expired
+    assert [r.ticket for r in ready] == [r.ticket for r in reqs]
+    for r in ready:
+        q.release(r)

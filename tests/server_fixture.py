@@ -1,0 +1,109 @@
+"""Launcher fixture for the black-box serving harness.
+
+``ServerProcess`` spawns ``python -m repro.launch.server`` as a real
+subprocess (the TGI integration-test service pattern: spawn, readiness
+probe, teardown), captures its stdout/stderr into ``server-logs/`` (the CI
+``integration`` job uploads that directory when the job fails), waits for
+the ``READY host:port`` line, then confirms liveness with a ``ping`` over
+the wire before handing the address to the test.
+
+Teardown prefers a protocol ``shutdown`` (exercises the op) and escalates
+to terminate/kill so a wedged server can't hang the suite.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+LOG_DIR = REPO / "server-logs"
+_READY = re.compile(r"^READY (\S+):(\d+)$", re.M)
+
+
+class ServerProcess:
+    """One serving subprocess: spawn → READY → ping → (tests) → stop."""
+
+    def __init__(self, *, train_steps: int = 5, args=(),
+                 startup_timeout_s: float = 420.0,
+                 log_name: str = "server"):
+        LOG_DIR.mkdir(exist_ok=True)
+        self.log_path = LOG_DIR / f"{log_name}.log"
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "repro.launch.server", "--port", "0",
+               "--train-steps", str(train_steps), *map(str, args)]
+        self._log = open(self.log_path, "w")
+        self.proc = subprocess.Popen(cmd, stdout=self._log,
+                                     stderr=subprocess.STDOUT, env=env,
+                                     cwd=REPO)
+        try:
+            self.host, self.port = self._wait_ready(startup_timeout_s)
+        except BaseException:
+            self.stop()
+            raise
+
+    # -- readiness ----------------------------------------------------------
+
+    def _wait_ready(self, timeout_s: float) -> tuple[str, int]:
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if self.proc.poll() is not None:
+                raise RuntimeError(
+                    f"server exited rc={self.proc.returncode} before READY "
+                    f"— tail of {self.log_path}:\n{self._log_tail()}")
+            m = _READY.search(self.log_path.read_text())
+            if m:
+                host, port = m.group(1), int(m.group(2))
+                self._probe(host, port, deadline)
+                return host, port
+            time.sleep(0.5)
+        raise TimeoutError(
+            f"server not READY after {timeout_s}s — tail of "
+            f"{self.log_path}:\n{self._log_tail()}")
+
+    def _probe(self, host: str, port: int, deadline: float):
+        from repro.launch.server import EngineClient
+        while True:
+            try:
+                with EngineClient(host, port, timeout=5.0) as c:
+                    assert c.ping()
+                return
+            except OSError:
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.2)
+
+    def _log_tail(self, n: int = 2000) -> str:
+        try:
+            return self.log_path.read_text()[-n:]
+        except OSError:
+            return "<log unreadable>"
+
+    # -- use ----------------------------------------------------------------
+
+    def client(self, **kw):
+        from repro.launch.server import EngineClient
+        return EngineClient(self.host, self.port, **kw)
+
+    def stop(self):
+        if self.proc.poll() is None:
+            try:
+                with self.client(timeout=5.0) as c:
+                    c.shutdown()
+            except OSError:
+                pass
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.proc.terminate()
+                try:
+                    self.proc.wait(timeout=5)
+                except subprocess.TimeoutExpired:
+                    self.proc.kill()
+                    self.proc.wait()
+        self._log.close()

@@ -1,0 +1,61 @@
+"""Property-based tests (hypothesis) for the multi-lane scheduler contract.
+
+Thin strategy wrappers over ``tests/lifecycle_props.py`` — the invariant
+logic lives there, shared with the always-on seeded sweeps in
+``tests/test_queue.py``, so an env without hypothesis (this module skips at
+import, like the other hypothesis suites) still exercises every check.
+Randomized request streams across tenants / priorities / deadlines must
+show: no dropped or duplicated tickets, EDF dispatch order within a lane,
+per-tenant quota ceilings never exceeded, counters consistent — and the
+degenerate stream (one tenant, priority 0, no deadlines) drains in exactly
+the single-lane FIFO order.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import lifecycle_props as props  # noqa: E402
+from repro.serve.queue import TenantQuota  # noqa: E402
+
+spec_st = st.fixed_dictionaries({
+    "kind": st.sampled_from(list(props.KINDS)),
+    "n_rows": st.integers(1, 40),
+    "tenant": st.sampled_from(["a", "b", "c"]),
+    "priority": st.integers(0, 3),
+    "deadline_ms": st.one_of(st.none(), st.floats(1.0, 500.0)),
+    "dt": st.floats(0.0, 0.05),
+})
+
+# max_inflight_rows ≥ 40 (the largest request) so no submit is rejected for
+# exceeding a tenant's whole budget — mirrors lifecycle_props.random_config
+quota_st = st.builds(
+    TenantQuota,
+    max_queued=st.one_of(st.none(), st.integers(1, 6)),
+    max_inflight_rows=st.one_of(st.none(), st.integers(40, 200)))
+
+cfg_st = st.fixed_dictionaries({
+    "capacity": st.integers(4, 32),
+    "quotas": st.one_of(
+        st.none(),
+        st.dictionaries(st.sampled_from(["a", "b"]), quota_st, max_size=2)),
+    "shed_watermark": st.sampled_from([1.0, 0.75, 0.5]),
+    "take_every": st.integers(1, 5),
+    "complete_frac": st.floats(0.0, 1.0),
+})
+
+
+@settings(max_examples=60, deadline=None)
+@given(specs=st.lists(spec_st, min_size=1, max_size=60), cfg=cfg_st)
+def test_stream_invariants(specs, cfg):
+    result = props.drive_queue(specs, cfg)
+    props.check_no_drop_no_dup(result)
+    props.check_edf_order(result)
+    props.check_quota_ceilings(result, cfg.get("quotas"))
+    props.check_counters_consistent(result)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes=st.lists(st.integers(1, 100), min_size=1, max_size=30))
+def test_fifo_identity_degenerate_stream(sizes):
+    props.check_fifo_identity(sizes)
