@@ -1,6 +1,6 @@
 """Tiered-cache / async-prefetch benchmark → BENCH_prefetch.json.
 
-Two measurements (schema documented in benchmarks/README.md):
+Three measurements (schema documented in benchmarks/README.md):
 
   1. **Train-loop overlap** — the same tiny-DLRM training run executed with
      the synchronous loop and with ``repro.cache.PrefetchPipeline`` staging
@@ -12,6 +12,14 @@ Two measurements (schema documented in benchmarks/README.md):
      stream through ``Engine.score_tiered``: hit rate, cold bytes moved and
      per-tier storage per fraction, plus overlapped vs synchronous tiered
      scoring latency (p50) at each point.
+  3. **Drift sweep** — the adaptive tier policy vs the static split on a
+     popularity-shift open-loop workload (``DriftingCTR`` hard shift +
+     ``run_open_loop``), with training-update writebacks interleaved. Each
+     policy runs twice: once under a ``TickClock`` so every reported
+     hit-rate / bytes-moved / shed / occupancy / compile number is exactly
+     reproducible (these are the metrics the blocking CI bench gate diffs —
+     see benchmarks/gate_metrics.json), and once on the wall clock for the
+     advisory e2e p99.
 
 Runs on CPU (the CI artifact); the same script is the measurement harness on
 an accelerator, where tier placement (HBM vs host) is physical.
@@ -30,22 +38,34 @@ import time
 import jax
 import numpy as np
 
-from repro.cache import TieredTableStore
-from repro.data.synthetic import CTRSpec, SyntheticCTR
+from repro.cache import (DecayAdmissionPolicy, StaticTierPolicy,
+                         TieredTableStore)
+from repro.data.synthetic import CTRSpec, DriftingCTR, SyntheticCTR
 from repro.embeddings.table import FieldSpec
-from repro.launch.serve import train_packed_dlrm
+from repro.launch.serve import run_open_loop, train_packed_dlrm
 from repro.models.dlrm import DLRM, DLRMConfig
-from repro.serve import Engine
+from repro.serve import Engine, TickClock
 from repro.train.loop import Trainer
 from repro.train.optimizer import adam
 from repro.zoo import dlrm_builder
 
 FULL = dict(field_vocabs=(3000, 2000, 1500, 1000), pipeline_steps=100,
             train_steps=60, train_batch=2048, serve_steps=30, serve_batch=2048,
-            cell_rows=512, hot_fractions=(0.0, 0.1, 0.25, 0.5, 0.9, 1.0))
+            cell_rows=512, hot_fractions=(0.0, 0.1, 0.25, 0.5, 0.9, 1.0),
+            drift_requests=120, drift_qps=200.0, drift_batch=512,
+            drift_shift_at=40, drift_shift_frac=0.4, drift_hot_frac=0.2,
+            drift_halflife=32.0, drift_policy_every=2, drift_max_moves=256,
+            drift_writeback_every=16)
 SMOKE = dict(field_vocabs=(600, 400, 500), pipeline_steps=25,
              train_steps=20, train_batch=512, serve_steps=8, serve_batch=512,
-             cell_rows=128, hot_fractions=(0.0, 0.1, 0.5, 1.0))
+             cell_rows=128, hot_fractions=(0.0, 0.1, 0.5, 1.0),
+             drift_requests=48, drift_qps=400.0, drift_batch=256,
+             drift_shift_at=12, drift_shift_frac=0.4, drift_hot_frac=0.2,
+             drift_halflife=12.0, drift_policy_every=1, drift_max_moves=256,
+             drift_writeback_every=8)
+
+SERVE_STEP0 = 10_000    # serving streams start here to stay disjoint from
+#                         training batches (mirrors repro.launch.serve)
 
 
 def bench_train_overlap(cfg: dict) -> dict:
@@ -76,11 +96,9 @@ def bench_train_overlap(cfg: dict) -> dict:
     return out
 
 
-def bench_hot_sweep(cfg: dict) -> list[dict]:
+def bench_hot_sweep(cfg: dict, art) -> list[dict]:
     """Hit rate / bytes moved / tiered-score latency per hot fraction."""
-    serve_cfg, params, state, buffers, spec, res = train_packed_dlrm(
-        field_vocabs=cfg["field_vocabs"], train_steps=cfg["pipeline_steps"],
-        train_batch=cfg["train_batch"])
+    serve_cfg, params, state, buffers, spec, res = art
     freqs = SyntheticCTR(spec).expected_frequencies()
     req_ds = SyntheticCTR(spec._replace(batch_size=cfg["serve_batch"]))
 
@@ -119,11 +137,114 @@ def bench_hot_sweep(cfg: dict) -> list[dict]:
     return points
 
 
+def _drift_run(cfg: dict, art, policy_name: str, clock):
+    """One open-loop popularity-shift replay under ``policy_name``.
+
+    Returns (metrics dict, engine). With a ``TickClock`` every metric in the
+    dict is a pure function of the config — the bench gate's contract; with
+    ``clock=None`` the run rides the wall clock and only its
+    ``request_summary`` p99 is meaningful.
+    """
+    serve_cfg, params, state, buffers, spec, res = art
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    master = np.asarray(res["final_params"]["embedding"]["emb"])
+    offs = np.asarray(buffers["offsets"], np.int64)
+    n = cfg["drift_requests"]
+    shift_at = cfg["drift_shift_at"]
+    steady_mark = shift_at + (n - shift_at) // 2   # counters snapshot here
+
+    store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                             freqs, cfg["drift_hot_frac"])
+    engine = Engine(clock=clock) if clock is not None else Engine()
+    engine.register_tiered_model(
+        "dlrm", DLRM, serve_cfg, params, state, buffers, store,
+        shapes={"tiered": cfg["cell_rows"]})
+    if policy_name == "decay":
+        policy = DecayAdmissionPolicy(store.meta["n"],
+                                      halflife=cfg["drift_halflife"],
+                                      max_moves=cfg["drift_max_moves"])
+    else:
+        policy = StaticTierPolicy()
+    engine.attach_tier_policy(policy, every=cfg["drift_policy_every"])
+
+    req_ds = DriftingCTR(spec._replace(batch_size=cfg["drift_batch"]),
+                         shift_at=shift_at,
+                         shift_frac=cfg["drift_shift_frac"],
+                         step0=SERVE_STEP0)
+    wb_every = cfg["drift_writeback_every"]
+    snap = {}
+
+    def on_submit(i, ids):
+        if i == steady_mark:
+            snap.update(store.counters())
+        if wb_every and i and i % wb_every == 0:
+            gids = np.unique(np.asarray(ids, np.int64) + offs[None, :])
+            engine.writeback_embeddings(gids, master[gids])
+
+    compiles0 = engine.compile_count
+    ol = run_open_loop(engine,
+                       lambda i: req_ds.batch(SERVE_STEP0 + i)["ids"],
+                       n, cfg["drift_qps"], kind="tiered",
+                       on_submit=on_submit)
+    c = store.counters()
+    hot_d = c["hot_lookups"] - snap.get("hot_lookups", 0)
+    tot_d = hot_d + c["cold_lookups"] - snap.get("cold_lookups", 0)
+    metrics = {
+        "policy": policy_name,
+        "hit_rate": round(c["hit_rate"], 4),
+        "steady_hit_rate": round(hot_d / tot_d, 4) if tot_d else 1.0,
+        "bytes_moved": int(c["bytes_moved"]),
+        "promotions": int(c["promotions"]),
+        "demotions": int(c["demotions"]),
+        "promote_bytes": int(c["promote_bytes"]),
+        "writebacks": int(c["writebacks"]),
+        "writeback_bytes": int(c["writeback_bytes"]),
+        "completed": int(ol["completed"]),
+        "shed": int(ol["shed"]),
+        "compiles_during_run": int(engine.compile_count - compiles0),
+    }
+    return metrics, engine
+
+
+def bench_drift(cfg: dict, art) -> dict:
+    """Adaptive (decay-admission) vs static tier policy on a popularity
+    shift, writebacks interleaved. Deterministic metrics come from a
+    ``TickClock`` replay; the advisory ``e2e_p99_ms`` from a second
+    wall-clock run of the identical trajectory inputs."""
+    n = cfg["drift_requests"]
+    shift_at = cfg["drift_shift_at"]
+    points = []
+    for name in ("static", "decay"):
+        det, _ = _drift_run(cfg, art, name, TickClock())
+        _, wall_engine = _drift_run(cfg, art, name, None)
+        summary = wall_engine.request_summary(skip_warmup=2)
+        det["e2e_p99_ms"] = round(summary["tiered"]["latency"]["p99_ms"], 3)
+        points.append(det)
+        print(f"[prefetch_bench] drift policy={name:<6} "
+              f"hit_rate={det['hit_rate']:.3f} "
+              f"steady={det['steady_hit_rate']:.3f} "
+              f"moved={det['bytes_moved']}B "
+              f"promotions={det['promotions']} "
+              f"compiles={det['compiles_during_run']} "
+              f"p99={det['e2e_p99_ms']}ms")
+    return {
+        "requests": n,
+        "shift_at": shift_at,
+        "shift_frac": cfg["drift_shift_frac"],
+        "hot_frac": cfg["drift_hot_frac"],
+        "steady_from": shift_at + (n - shift_at) // 2,
+        "points": points,
+    }
+
+
 def run(cfg: dict) -> dict:
     train = bench_train_overlap(cfg)
     print(f"[prefetch_bench] train: sync={train['synchronous_ms_per_step']}ms "
           f"overlapped={train['overlapped_ms_per_step']}ms "
           f"(x{train['speedup']})")
+    art = train_packed_dlrm(field_vocabs=cfg["field_vocabs"],
+                            train_steps=cfg["pipeline_steps"],
+                            train_batch=cfg["train_batch"])
     return {
         "config": {k: (list(v) if isinstance(v, tuple) else v)
                    for k, v in cfg.items()},
@@ -131,7 +252,8 @@ def run(cfg: dict) -> dict:
                 "device_count": jax.device_count(),
                 "platform": platform.platform()},
         "train": train,
-        "tiers": bench_hot_sweep(cfg),
+        "tiers": bench_hot_sweep(cfg, art),
+        "drift": bench_drift(cfg, art),
         "unix_time": int(time.time()),
     }
 

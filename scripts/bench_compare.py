@@ -1,12 +1,14 @@
 #!/usr/bin/env python
 """Diff fresh BENCH_*.json smoke numbers against the checked-in baselines.
 
-The bench-smoke CI job runs the smoke benchmarks, then this script compares
-every numeric metric against ``benchmarks/baselines/BENCH_*.json`` and writes
-a markdown delta table to ``$GITHUB_STEP_SUMMARY`` (and stdout). The job
-stays ``continue-on-error`` — shared-runner noise must not veto a correct
-change — but regressions become *visible* in the PR summary instead of
-silently shipping.
+Two modes:
+
+**Advisory (default).** The bench-smoke CI job runs the smoke benchmarks,
+then this script compares every numeric metric against
+``benchmarks/baselines/BENCH_*.json`` and writes a markdown delta table to
+``$GITHUB_STEP_SUMMARY`` (and stdout). The job stays ``continue-on-error``
+— shared-runner noise must not veto a correct change — but regressions
+become *visible* in the PR summary instead of silently shipping.
 
 Comparable metrics are the flattened numeric leaves of each artifact, minus
 environment-dependent keys (timestamps, one-off setup costs, env/config
@@ -16,7 +18,20 @@ a ⚠ marker above +20%; throughput-ish keys (``goodput``, ``*_tok_s``,
 -20% — advisory only on shared runners.
 
     python scripts/bench_compare.py --fresh . --baseline benchmarks/baselines
-Exit code is always 0: visibility, not a gate.
+Advisory exit code is always 0: visibility, not a gate.
+
+**Gate (``--gate benchmarks/gate_metrics.json``).** The blocking bench-gate
+CI job checks only the metrics named by the allowlist file — metrics that
+are *deterministic by construction* (the ``TickClock`` open-loop replay:
+hit rates, bytes moved, shed counts, promotion/writeback counters, compile
+counts — never wall-clock). Any mismatch vs the checked-in baseline exits
+non-zero; so does a stale allowlist (pattern matching nothing, metric
+missing from either side) or an allowlist pattern that reaches a
+wall-clock-looking key. Intended behaviour changes regenerate the baseline
+in the same PR — that diff *is* the review surface.
+
+    python scripts/bench_compare.py --fresh . --baseline benchmarks/baselines \\
+        --gate benchmarks/gate_metrics.json
 """
 from __future__ import annotations
 
@@ -88,12 +103,115 @@ def render(name: str, rows: list[tuple], top: int = 12) -> str:
     return "\n".join(lines) + "\n"
 
 
+# gate mode: allowlisted metrics must never look wall-clock — determinism is
+# the whole contract (a timing metric here would flake the blocking job)
+WALLCLOCK = re.compile(r"(_ms|ms_per_step|_tok_s|p50|p99|unix_time|"
+                       r"_s|seconds|time)($|\.)")
+
+
+def gate_check(fresh_dir: str, baseline_dir: str, gate_path: str
+               ) -> tuple[list[str], int]:
+    """Check every allowlisted metric for exact (or ``tol_pct``) agreement.
+
+    Returns ``(failures, n_checked)`` — empty failures means the gate
+    passes. Unlike the advisory compare, nothing is SKIPped here: compile
+    counts are first-class gate metrics.
+    """
+    with open(gate_path) as fh:
+        cfg = json.load(fh)
+    failures, checked = [], 0
+    for name, spec in cfg["files"].items():
+        fresh_path = os.path.join(fresh_dir, name)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh artifact missing from "
+                            f"{fresh_dir!r} — did the benchmark run?")
+            continue
+        if not os.path.exists(base_path):
+            failures.append(f"{name}: no checked-in baseline at "
+                            f"{base_path!r}")
+            continue
+        with open(fresh_path) as fh:
+            f = flatten(json.load(fh))
+        with open(base_path) as fh:
+            b = flatten(json.load(fh))
+        for rule in spec["rules"]:
+            pat = re.compile(rule["pattern"])
+            tol = float(rule.get("tol_pct", 0.0))
+            keys = sorted(k for k in set(f) | set(b) if pat.search(k))
+            if not keys:
+                failures.append(
+                    f"{name}: allowlist pattern {rule['pattern']!r} matches "
+                    "no metrics — stale gate config")
+                continue
+            for k in keys:
+                if WALLCLOCK.search(k):
+                    failures.append(
+                        f"{name}: {k} is matched by the allowlist but looks "
+                        "wall-clock — the gate takes deterministic metrics "
+                        "only")
+                    continue
+                if k not in f:
+                    failures.append(f"{name}: {k} missing from the fresh "
+                                    "run")
+                    continue
+                if k not in b:
+                    failures.append(
+                        f"{name}: {k} missing from the baseline — "
+                        f"regenerate {base_path}")
+                    continue
+                checked += 1
+                old, new = b[k], f[k]
+                if tol == 0.0:
+                    ok = new == old
+                else:
+                    ok = abs(new - old) <= tol / 100.0 * abs(old) \
+                        if old != 0 else new == old
+                if not ok:
+                    failures.append(
+                        f"{name}: {k} = {fmt_val(new)} deviates from "
+                        f"baseline {fmt_val(old)}"
+                        + (f" beyond ±{tol}%" if tol else
+                           " (exact match required)"))
+    return failures, checked
+
+
+def run_gate(args) -> int:
+    failures, checked = gate_check(args.fresh, args.baseline, args.gate)
+    lines = ["## Bench gate (deterministic metrics)", ""]
+    if failures:
+        lines.append(f"**FAIL** — {len(failures)} violation(s) over "
+                     f"{checked} gated metric(s):")
+        lines += [f"- {f}" for f in failures]
+        lines.append("\nIf the change is intended, regenerate the baseline "
+                     "(`PYTHONPATH=src python benchmarks/prefetch_bench.py "
+                     "--smoke --out benchmarks/baselines/"
+                     "BENCH_prefetch.json`) and commit it in the same PR.")
+    else:
+        lines.append(f"PASS — {checked} gated metrics match the checked-in "
+                     "baselines exactly.")
+    report = "\n".join(lines) + "\n"
+    print(report)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(report)
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=".",
                     help="directory holding the fresh BENCH_*.json files")
     ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--gate", default=None, metavar="ALLOWLIST",
+                    help="gate mode: check only the deterministic metrics "
+                         "named by this allowlist (benchmarks/"
+                         "gate_metrics.json) and exit non-zero on any "
+                         "mismatch")
     args = ap.parse_args(argv)
+    if args.gate:
+        return run_gate(args)
 
     sections = []
     fresh_files = sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))

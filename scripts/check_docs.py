@@ -12,7 +12,10 @@ Validates that intra-repo references in the documentation actually exist:
   3. every command in a fenced ```bash block resolves: a ``python -m
      repro.x.y`` / ``python -m benchmarks.x`` module must map to a real
      source file, and any ``scripts/*.py``-style path named in a command
-     must exist (the doc-rot class the link checker misses);
+     must exist (the doc-rot class the link checker misses); additionally,
+     every ``--flag`` the command passes must appear among the target
+     module's ``add_argument`` calls (pure AST — renaming a CLI knob
+     without updating its documented examples fails the docs job);
   4. with ``--docstrings``: a pure-AST pass (no imports — the docs CI job
      installs no jax) asserting every name exported from the public
      ``repro.cache`` and ``repro.analysis`` ``__init__``s and every public
@@ -90,21 +93,60 @@ def module_file(mod: str) -> Path | None:
     return None
 
 
+FLAG_RE = re.compile(r"(?<![\w-])(--[A-Za-z][A-Za-z0-9-]*)")
+
+
+def module_flags(src: Path) -> set[str] | None:
+    """All ``--flags`` a module's argparse surface accepts (AST scan of
+    ``add_argument`` string literals). ``None`` when the module has no
+    ``add_argument`` calls — flag checking doesn't apply to it."""
+    tree = ast.parse(src.read_text(encoding="utf-8"))
+    flags, found = {"--help"}, False
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            found = True
+            for a in node.args:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                        and a.value.startswith("--"):
+                    flags.add(a.value)
+    return flags if found else None
+
+
+def _logical_lines(block: str):
+    """Join backslash-continued lines — documented commands wrap."""
+    out, acc = [], ""
+    for line in block.splitlines():
+        line = line.split("#", 1)[0]
+        if line.rstrip().endswith("\\"):
+            acc += line.rstrip()[:-1] + " "
+        else:
+            out.append(acc + line)
+            acc = ""
+    if acc:
+        out.append(acc)
+    return out
+
+
 def check_bash_blocks(md: Path, text: str, rel) -> tuple[int, list[str]]:
-    """Resolve `python -m` modules and repo-path arguments inside fenced
-    command blocks."""
+    """Resolve `python -m` modules, repo-path arguments and ``--flag``
+    spellings inside fenced command blocks."""
     errors, n_refs = [], 0
     for block in BASH_RE.finditer(text):
-        for line in block.group(1).splitlines():
-            line = line.split("#", 1)[0]
+        for line in _logical_lines(block.group(1)):
+            target_src = None      # the file whose argparse governs `line`
             for m in MOD_RE.finditer(line):
                 mod = m.group(1)
                 if mod.split(".", 1)[0] not in LOCAL_PKGS:
                     continue
                 n_refs += 1
-                if module_file(mod) is None:
+                src = module_file(mod)
+                if src is None:
                     errors.append(f"{rel}: bash block names module "
                                   f"`{mod}` which does not resolve")
+                else:
+                    target_src = src
             for m in CMD_PATH_RE.finditer(line):
                 target = m.group(1)
                 if GENERATED.search(target):
@@ -113,6 +155,21 @@ def check_bash_blocks(md: Path, text: str, rel) -> tuple[int, list[str]]:
                 if not resolve(md, target):
                     errors.append(f"{rel}: bash block references missing "
                                   f"path -> {target}")
+                elif target.endswith(".py") and re.search(
+                        rf"python[0-9.]*\s+{re.escape(target)}", line):
+                    target_src = REPO / target
+            if target_src is None:
+                continue
+            known = module_flags(target_src)
+            if known is None:
+                continue
+            for flag in FLAG_RE.findall(line):
+                n_refs += 1
+                if flag.split("=", 1)[0] not in known:
+                    errors.append(
+                        f"{rel}: bash block passes `{flag}` but "
+                        f"{target_src.relative_to(REPO)} defines no such "
+                        "flag")
     return n_refs, errors
 
 

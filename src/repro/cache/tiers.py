@@ -28,6 +28,18 @@ tier mask (never an add), so no float combine can perturb a row.
 Per-tier hit/miss/byte counters are first-class — ``counters()`` backs the
 hit-rate-vs-hot-fraction curve in ``benchmarks/prefetch_bench.py`` and the
 hand-computed trace asserted in ``tests/test_cache.py``.
+
+The store is an **inclusive cache**: the host side keeps a full packed
+mirror of every row (indexed by ``local_idx``), and the hot tier holds
+device copies of the currently-resident subset. That makes the incremental
+tier moves of ``cache.policy`` cheap and safe — a demotion only flips the
+``is_hot`` bit (the authoritative row never left the mirror), a promotion
+copies one mirror row into a free hot slot, and both preserve every array
+shape so compiled tiered cells never recompile (``apply_moves``). Training
+updates enter through ``writeback``, which re-quantizes under the feature's
+current width and writes the mirror *first*, then patches the hot copy if
+resident — so a concurrent demotion can never lose an update (writeback
+ordering).
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ import numpy as np
 
 from repro.core import packing
 from repro.core.inference import _pad_rows, _auto_pad_multiple
-from repro.core.quantizer import dequantize_codes, int_bounds
+from repro.core.quantizer import dequantize_codes, int_bounds, quantize_codes
 from repro.embeddings.frequency import hot_feature_mask
 
 
@@ -89,6 +101,8 @@ class TieredTableStore:
             row_pad_multiple = _auto_pad_multiple(max(int(is_hot.sum()), 1),
                                                   max(n_widths, 1))
         self._row_pad_multiple = int(row_pad_multiple)
+        self._policy = None
+        self.hot_version = 0   # bumped on any hot-tier array replacement
 
         self._rebuild(table, is_hot, capacities=None)
         self.reset_counters()
@@ -114,8 +128,8 @@ class TieredTableStore:
         device = self.device
 
         tier_local = np.zeros((n,), np.int32)
-        hot_subs, cold_subs = {}, {}
-        hot_bytes = cold_bytes = 0
+        hot_subs, mirror, free_slots = {}, {}, {}
+        hot_bytes = cold_bytes = mirror_bytes = 0
         for i, b in enumerate(bits):
             if b == 0:
                 continue
@@ -141,15 +155,26 @@ class TieredTableStore:
             hot_rows = np.tile(pad_row, (padded, 1))
             hot_rows[:hot_f.size] = sub[local_idx[hot_f]]
             hot_subs[f"b{b}"] = jax.device_put(jnp.asarray(hot_rows), device)
-            cold_subs[f"b{b}"] = np.ascontiguousarray(sub[local_idx[cold_f]])
+            # inclusive host mirror: every packed row, indexed by local_idx —
+            # the authoritative copy that cold fills, promotions and
+            # writebacks all read/write
+            mirror[f"b{b}"] = np.array(sub)
+            # hot pad rows double as free promotion slots; stored descending
+            # so pop() hands out the lowest slot first (deterministic)
+            free_slots[f"b{b}"] = list(range(padded - 1, hot_f.size - 1, -1))
             hot_bytes += hot_f.size * packing.row_bytes(d, b)
             cold_bytes += cold_f.size * packing.row_bytes(d, b)
+            mirror_bytes += mirror[f"b{b}"].nbytes
 
         # host-side routing vectors (the cold path plans gathers with them)
         self._is_hot_np = is_hot
         self._width_idx_np = width_idx
         self._tier_local_np = tier_local
-        self._cold_subs = cold_subs
+        self._local_idx_np = local_idx
+        self._mirror = mirror
+        self._free_slots = free_slots
+        self._alpha_np = np.asarray(table["alpha"])
+        self._beta_np = np.asarray(table["beta"])
 
         # device-resident hot tier: the pytree a serve cell binds (layout
         # contract: repro.dist.sharding.tiered_hot_pspecs)
@@ -163,7 +188,9 @@ class TieredTableStore:
             "beta": jax.device_put(jnp.asarray(table["beta"]), device),
         }
         self._storage = {"hot_bytes": int(hot_bytes),
-                         "cold_bytes": int(cold_bytes)}
+                         "cold_bytes": int(cold_bytes),
+                         "mirror_bytes": int(mirror_bytes)}
+        self.hot_version += 1
 
     # -- serving-time repack (repro.serve.repack) ---------------------------
 
@@ -190,7 +217,19 @@ class TieredTableStore:
             self._freqs = np.asarray(frequencies)
 
         width_idx = np.asarray(table["width_idx"])
-        is_hot = self._hot_mask(width_idx)
+        if self._policy is not None:
+            # an adaptive policy owns the split: carry the live tier bits
+            # across the repack instead of re-seating from training
+            # frequencies, and rank overflow demotions by live score
+            is_hot = self._is_hot_np.copy()
+            for i, b in enumerate(self.meta["bits"]):
+                if b == 0:
+                    is_hot[width_idx == i] = True
+            rank = (self._policy.scores()
+                    if hasattr(self._policy, "scores") else self._freqs)
+        else:
+            is_hot = self._hot_mask(width_idx)
+            rank = self._freqs
         caps = {k: int(v.shape[0]) for k, v in self.hot["subtables"].items()}
         for i, b in enumerate(self.meta["bits"]):
             if b == 0:
@@ -198,21 +237,211 @@ class TieredTableStore:
             hot_f = np.nonzero(is_hot & (width_idx == i))[0]
             over = hot_f.size - caps[f"b{b}"]
             if over > 0:    # demote the coldest overflow features
-                order = hot_f[np.argsort(self._freqs[hot_f], kind="stable")]
+                order = hot_f[np.argsort(rank[hot_f], kind="stable")]
                 is_hot[order[:over]] = False
         self._rebuild(table, is_hot, capacities=caps)
+
+    # -- incremental tier moves (cache.policy) ------------------------------
+
+    def attach_policy(self, policy):
+        """Wire a tier policy (``cache.policy``) into the lookup stream:
+        every ``prefetch_cold`` feeds its valid ids to ``policy.observe``,
+        so the policy scores exactly the traffic the hit/miss counters see.
+        Returns the policy for chaining."""
+        self._policy = policy
+        return policy
+
+    @property
+    def policy(self):
+        """The attached tier policy, or ``None`` (static split)."""
+        return self._policy
+
+    def free_slot_counts(self) -> dict:
+        """Free hot-subtable rows per width key (``{"b8": 3, ...}``) — the
+        promotion headroom ``cache.policy`` plans against."""
+        return {k: len(v) for k, v in self._free_slots.items()}
+
+    def apply_moves(self, promote, demote) -> dict:
+        """Apply one ``TierPlan``'s promotions/demotions *incrementally* —
+        no re-pack, no shape change, so compiled tiered cells stay valid
+        (the engine rebinds the updated arrays; zero recompiles is
+        counter-asserted in tests/test_policy.py).
+
+        Demotions flip the tier bit and free the slot — the inclusive
+        mirror already holds the row, nothing is copied. Promotions copy
+        mirror rows into free slots (one pow-2-padded device scatter per
+        width). Plans must be feasible: every promoted feature cold, every
+        demoted feature hot, and per-width promotions ≤ free slots after
+        demotions (``DecayAdmissionPolicy.plan`` guarantees this)."""
+        promote = np.asarray(promote, np.int64).reshape(-1)
+        demote = np.asarray(demote, np.int64).reshape(-1)
+        if promote.size == 0 and demote.size == 0:
+            return {"promotions": 0, "demotions": 0, "bytes": 0}
+        bits, d, n = self.meta["bits"], self.meta["d"], self.meta["n"]
+        widx = self._width_idx_np
+        if promote.size and self._is_hot_np[promote].any():
+            raise ValueError("plan promotes features already hot")
+        if demote.size and not self._is_hot_np[demote].all():
+            raise ValueError("plan demotes features already cold")
+        moved = np.concatenate([promote, demote])
+        if np.unique(moved).size != moved.size:
+            raise ValueError("plan lists a feature twice")
+        if any(bits[widx[f]] == 0 for f in moved):
+            raise ValueError("zero-width features never occupy a hot row")
+
+        # 1) demote: free the slot, flip the bit — the mirror is authoritative
+        for f in demote:
+            self._free_slots[f"b{bits[widx[f]]}"].append(
+                int(self._tier_local_np[f]))
+        self._is_hot_np[demote] = False
+
+        # 2) promote: copy mirror rows into free slots, batched per width
+        new_subs = dict(self.hot["subtables"])
+        nbytes = 0
+        slot_idx, slot_val = [], []
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue
+            sel = promote[widx[promote] == i]
+            if sel.size == 0:
+                continue
+            free = self._free_slots[f"b{b}"]
+            if sel.size > len(free):
+                raise ValueError(
+                    f"hot tier b{b} has {len(free)} free slots, plan "
+                    f"promotes {sel.size}")
+            slots = np.asarray([free.pop() for _ in range(sel.size)],
+                               np.int32)
+            self._tier_local_np[sel] = slots
+            rows = self._mirror[f"b{b}"][self._local_idx_np[sel]]
+            nbytes += rows.nbytes
+            sub = new_subs[f"b{b}"]
+            p2 = 1 << max(int(np.ceil(np.log2(sel.size))), 2)
+            slots_p = np.full((p2,), sub.shape[0], np.int32)  # OOB: dropped
+            slots_p[:sel.size] = slots
+            rows_p = np.zeros((p2, rows.shape[1]), rows.dtype)
+            rows_p[:sel.size] = rows
+            new_subs[f"b{b}"] = _scatter_rows(sub, jnp.asarray(slots_p),
+                                              jnp.asarray(rows_p))
+            slot_idx.append(sel)
+            slot_val.append(slots)
+        self._is_hot_np[promote] = True
+
+        # 3) device routing vectors: one padded scatter each, only the moves
+        p2 = 1 << max(int(np.ceil(np.log2(moved.size))), 2)
+        idx = np.full((p2,), n, np.int32)                     # OOB: dropped
+        idx[:moved.size] = moved
+        hotv = np.zeros((p2,), bool)
+        hotv[:promote.size] = True
+        new_is_hot = _scatter_vec(self.hot["is_hot"], jnp.asarray(idx),
+                                  jnp.asarray(hotv))
+        new_tl = self.hot["tier_local"]
+        if slot_idx:
+            up_i, up_v = np.concatenate(slot_idx), np.concatenate(slot_val)
+            p2 = 1 << max(int(np.ceil(np.log2(up_i.size))), 2)
+            tidx = np.full((p2,), n, np.int32)
+            tidx[:up_i.size] = up_i
+            tval = np.zeros((p2,), np.int32)
+            tval[:up_v.size] = up_v
+            new_tl = _scatter_vec(new_tl, jnp.asarray(tidx),
+                                  jnp.asarray(tval))
+        self.hot = dict(self.hot, subtables=new_subs, is_hot=new_is_hot,
+                        tier_local=new_tl)
+        self.hot_version += 1
+
+        # storage accounting stays pad-free, keyed on the tier bit
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue
+            delta = (int((widx[promote] == i).sum())
+                     - int((widx[demote] == i).sum())) * packing.row_bytes(d, b)
+            self._storage["hot_bytes"] += delta
+            self._storage["cold_bytes"] -= delta
+        self._counters["promotions"] += int(promote.size)
+        self._counters["demotions"] += int(demote.size)
+        self._counters["promote_bytes"] += int(nbytes)
+        return {"promotions": int(promote.size),
+                "demotions": int(demote.size), "bytes": int(nbytes)}
+
+    # -- training-update writeback ------------------------------------------
+
+    def writeback(self, ids, vectors) -> dict:
+        """Flow training-time embedding updates into the store without a
+        re-pack: re-quantize each vector under its feature's *current*
+        width and overwrite the packed row.
+
+        Ordering contract: the host mirror (the cold store) is written
+        **first** — it is the authoritative copy — and the hot subtable is
+        patched after, only for currently-resident features. A demotion
+        interleaved between the two writes therefore cannot lose the
+        update: demotions copy nothing, they re-expose the already-updated
+        mirror row. Duplicate ids resolve last-write-wins. Zero-width
+        features store no row and are skipped. Hot and cold reads of a
+        written feature are bit-exact to each other (same packed words in
+        both tiers; round-trip asserted in tests/test_policy.py)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        vectors = np.asarray(vectors, np.float32).reshape(ids.size,
+                                                          self.meta["d"])
+        if ids.size:
+            # np.unique keeps the first occurrence; scan reversed to keep
+            # the last (last-write-wins)
+            _, first = np.unique(ids[::-1], return_index=True)
+            keep = np.sort(ids.size - 1 - first)
+            ids, vectors = ids[keep], vectors[keep]
+        bits = self.meta["bits"]
+        widx = self._width_idx_np[ids] if ids.size else np.zeros(0, np.int32)
+        new_subs = dict(self.hot["subtables"])
+        nbytes, written, touched_hot = 0, 0, False
+        for i, b in enumerate(bits):
+            if b == 0:
+                continue
+            sel = np.nonzero(widx == i)[0]
+            if sel.size == 0:
+                continue
+            f = ids[sel]
+            codes = quantize_codes(jnp.asarray(vectors[sel]),
+                                   self._alpha_np[i], self._beta_np, b)
+            words = np.asarray(packing.pack_codes(codes, b))
+            # cold store FIRST: mirror is authoritative (see docstring)
+            self._mirror[f"b{b}"][self._local_idx_np[f]] = words
+            nbytes += words.nbytes
+            written += int(f.size)
+            hot_sel = np.nonzero(self._is_hot_np[f])[0]
+            if hot_sel.size:
+                slots = self._tier_local_np[f[hot_sel]].astype(np.int32)
+                sub = new_subs[f"b{b}"]
+                p2 = 1 << max(int(np.ceil(np.log2(hot_sel.size))), 2)
+                slots_p = np.full((p2,), sub.shape[0], np.int32)
+                slots_p[:hot_sel.size] = slots
+                rows_p = np.zeros((p2, words.shape[1]), words.dtype)
+                rows_p[:hot_sel.size] = words[hot_sel]
+                new_subs[f"b{b}"] = _scatter_rows(sub, jnp.asarray(slots_p),
+                                                  jnp.asarray(rows_p))
+                nbytes += int(words[hot_sel].nbytes)
+                touched_hot = True
+        if touched_hot:
+            self.hot = dict(self.hot, subtables=new_subs)
+            self.hot_version += 1
+        self._counters["writebacks"] += written
+        self._counters["writeback_bytes"] += int(nbytes)
+        return {"written": written, "bytes": int(nbytes)}
 
     # -- counters -----------------------------------------------------------
 
     def reset_counters(self):
         self._counters = {"hot_lookups": 0, "cold_lookups": 0,
-                          "bytes_moved": 0, "prefetches": 0}
+                          "bytes_moved": 0, "prefetches": 0,
+                          "promotions": 0, "demotions": 0,
+                          "promote_bytes": 0,
+                          "writebacks": 0, "writeback_bytes": 0}
 
     def counters(self) -> dict:
         """Cumulative tier traffic: ``hot_lookups``/``cold_lookups`` count id
         lookups served per tier, ``bytes_moved`` the packed host→device bytes
         of cold fills, ``hit_rate`` their ratio, plus the static per-tier
-        storage bytes."""
+        storage bytes. Adaptive-policy activity rides along:
+        ``promotions``/``demotions``/``promote_bytes`` from ``apply_moves``
+        and ``writebacks``/``writeback_bytes`` from ``writeback``."""
         c = dict(self._counters, **self._storage)
         total = c["hot_lookups"] + c["cold_lookups"]
         c["hit_rate"] = c["hot_lookups"] / total if total else 1.0
@@ -247,14 +476,17 @@ class TieredTableStore:
                                                       *([1] * (ids.ndim - 1))),
                                         ids.shape)
             valid_flat = valid.reshape(-1)
+        if self._policy is not None:
+            # the policy sees exactly the traffic the counters see
+            self._policy.observe(flat[valid_flat])
         widx = self._width_idx_np[flat]
-        lidx = self._tier_local_np[flat]
+        lidx = self._local_idx_np[flat]
         cold = ~self._is_hot_np[flat] & valid_flat
         parts, nbytes = [], 0
         for i, b in enumerate(self.meta["bits"]):
             if b == 0:
                 continue
-            sub = self._cold_subs[f"b{b}"]
+            sub = self._mirror[f"b{b}"]
             sel = np.nonzero(cold & (widx == i))[0]
             if sel.size == 0 or sub.shape[0] == 0:
                 continue
@@ -316,6 +548,21 @@ class TieredTableStore:
     def storage(self) -> dict:
         """Static per-tier packed bytes (pad-free)."""
         return dict(self._storage)
+
+
+@jax.jit
+def _scatter_rows(sub, slots, rows):
+    """Land promoted/written packed rows in a hot subtable. ``slots`` is
+    pow-2 padded with out-of-bounds indices (dropped by scatter), so the
+    jit shape cache stays tiny and the subtable shape never changes."""
+    return sub.at[slots].set(rows)
+
+
+@jax.jit
+def _scatter_vec(vec, idx, vals):
+    """Patch a routing vector (``is_hot``/``tier_local``) at the moved
+    features only — same pow-2 OOB-padding contract as ``_scatter_rows``."""
+    return vec.at[idx].set(vals)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))

@@ -26,10 +26,20 @@ run asserts the swap compiled nothing. Pair with ``--repack-headroom`` to
 pack the serving table with spare per-width row capacity so demoted groups
 can land in intermediate widths instead of bottoming out at width 0.
 
+``--cache-policy decay`` turns the tiered store's hit/miss stream into a
+**traffic-adaptive hot set** (``repro.cache.policy``): exponential-decay
+admission scores plan bounded promotion/demotion batches every
+``--policy-every`` scheduling rounds, applied incrementally — no re-pack, no
+recompile. ``--drift``/``--shift-at`` make the request stream non-stationary
+(``DriftingCTR``), and ``--writeback N`` interleaves training-update
+writebacks with live traffic.
+
     python -m repro.launch.serve --steps 20 --batch 300
     python -m repro.launch.serve --steps 50 --batch 300 --bulk 20000 --json out.json
     python -m repro.launch.serve --qps 20 --steps 100 --batch 60 --deadline-ms 2000
     python -m repro.launch.serve --steps 20 --repack-budget 0.6 --repack-headroom 0.5
+    python -m repro.launch.serve --qps 40 --steps 200 --batch 60 --hot-frac 0.2 \
+        --cache-policy decay --decay-halflife 64 --shift-at 60 --writeback 16
 """
 from __future__ import annotations
 
@@ -138,7 +148,7 @@ def repack_tools(engine, res, frequencies, *, lam: float = 3e-5):
 
 def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
                   seed: int = 0, deadline_ms: float | None = None,
-                  kind: str = "score") -> dict:
+                  kind: str = "score", on_submit=None) -> dict:
     """Open-loop replay: offered traffic at ``qps`` on a virtual timeline.
 
     Arrivals are seeded exponential inter-arrival times (Poisson traffic at
@@ -147,6 +157,12 @@ def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
     The scheduler threads the virtual clock through dispatch (queue-wait is
     virtual-time from arrival to first dispatch) while assembly/compute are
     measured wall-clock, so one CPU run still produces an honest breakdown.
+    Inject ``serve.TickClock`` into the engine to make the whole trajectory
+    — coalescing, sheds, tier hits — deterministic for the CI bench gate.
+
+    ``on_submit(i, ids)`` (optional) runs right before request ``i`` is
+    admitted — the hook the launcher uses to interleave training-update
+    writebacks (``Engine.writeback_embeddings``) with live traffic.
 
     Returns {tickets, makespan_s, offered_qps, goodput_qps, completed,
     shed} — per-request latency percentiles live in
@@ -160,7 +176,10 @@ def run_open_loop(engine, make_ids, n_requests: int, qps: float, *,
         if not engine.scheduler.busy and i < n_requests and arrivals[i] > now:
             now = float(arrivals[i])        # idle server: jump to the arrival
         while i < n_requests and arrivals[i] <= now:
-            t = engine.submit(make_ids(i), kind=kind, now=float(arrivals[i]),
+            ids = make_ids(i)
+            if on_submit is not None:
+                on_submit(i, ids)
+            t = engine.submit(ids, kind=kind, now=float(arrivals[i]),
                               deadline_ms=deadline_ms)
             if t is None:
                 shed += 1
@@ -290,6 +309,37 @@ def main(argv=None):
                          "pinning this fraction of features device-resident "
                          "(repro.cache; requests go through score_tiered "
                          "with cold fills prefetched one chunk ahead)")
+    ap.add_argument("--cache-policy", choices=("static", "decay"),
+                    default=None,
+                    help="tier policy over the TieredTableStore (requires "
+                         "--hot-frac; open-loop requests then ride the "
+                         "tiered lane): 'decay' adapts the hot set with "
+                         "exponential-decay admission scores "
+                         "(repro.cache.policy), 'static' keeps the "
+                         "training-frequency split but runs the identical "
+                         "observation/plan machinery as the baseline")
+    ap.add_argument("--decay-halflife", type=float, default=256.0,
+                    help="decay-policy score half-life, in observation "
+                         "ticks (one tick per dispatched chunk)")
+    ap.add_argument("--policy-every", type=int, default=8,
+                    help="plan/apply tier moves every this many scheduling "
+                         "rounds")
+    ap.add_argument("--writeback", type=int, default=0,
+                    help="every N open-loop requests, write the request's "
+                         "features' master embeddings back through "
+                         "Engine.writeback_embeddings (train→serve update "
+                         "flow; 0 disables)")
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="non-stationary traffic: rotate each field's "
+                         "popularity ranks by this many ids per request "
+                         "step (DriftingCTR)")
+    ap.add_argument("--shift-at", type=int, default=None,
+                    help="hard popularity shift: from this request step on, "
+                         "rotate each field's hot set by --shift-frac of "
+                         "its vocabulary")
+    ap.add_argument("--shift-frac", type=float, default=0.3,
+                    help="fraction of each field's vocabulary the "
+                         "--shift-at popularity shift moves")
     ap.add_argument("--repack-budget", type=float, default=None,
                     help="serving-time precision adaptation: halfway through "
                          "the request stream, plan a new per-group "
@@ -336,6 +386,8 @@ def main(argv=None):
         print(f"[serve] headroom capacities: {caps}")
 
     store = None
+    if args.cache_policy is not None and args.hot_frac is None:
+        ap.error("--cache-policy requires --hot-frac (a tiered store)")
     if args.hot_frac is not None:
         from repro.cache import TieredTableStore
         freqs = SyntheticCTR(spec).expected_frequencies()
@@ -354,8 +406,38 @@ def main(argv=None):
           f"{dict(sorted(engine.registered_shapes.items()))} "
           f"(compiles={engine.compile_count})")
 
+    if args.cache_policy is not None:
+        from repro.cache import DecayAdmissionPolicy, StaticTierPolicy
+        if args.cache_policy == "decay":
+            policy = DecayAdmissionPolicy(store.meta["n"],
+                                          halflife=args.decay_halflife)
+        else:
+            policy = StaticTierPolicy()
+        engine.attach_tier_policy(policy, every=args.policy_every)
+        print(f"[serve] cache policy: {args.cache_policy} "
+              f"(halflife={args.decay_halflife}, every={args.policy_every})")
+
     # request stream at the *requested* batch size — decoupled from training
-    req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
+    if args.drift or args.shift_at is not None:
+        from repro.data.synthetic import DriftingCTR
+        req_ds = DriftingCTR(spec._replace(batch_size=args.batch),
+                             drift_rate=args.drift, shift_at=args.shift_at,
+                             shift_frac=args.shift_frac, step0=10_000)
+        print(f"[serve] drifting traffic: rate={args.drift} "
+              f"shift_at={args.shift_at} shift_frac={args.shift_frac}")
+    else:
+        req_ds = SyntheticCTR(spec._replace(batch_size=args.batch))
+
+    on_submit = None
+    if args.writeback:
+        master = np.asarray(res["final_params"]["embedding"]["emb"])
+        offs = np.asarray(buffers["offsets"], np.int64)
+
+        def on_submit(i, ids):
+            if i == 0 or i % args.writeback:
+                return
+            gids = np.unique(np.asarray(ids, np.int64) + offs[None, :])
+            engine.writeback_embeddings(gids, master[gids])
 
     repack_info = None
 
@@ -371,19 +453,26 @@ def main(argv=None):
         swapper.repack(plan)
         repack_info = (engine.compile_count, plan)
 
+    req_kind = "tiered" if args.cache_policy is not None else "score"
     open_loop = None
     if args.qps:
-        engine.score(req_ds.batch(9_999)["ids"])   # warm the cells
+        warm_ids = req_ds.batch(9_999)["ids"]
+        engine.score(warm_ids)                     # warm the cells
+        if req_kind == "tiered":
+            engine.score_tiered(warm_ids)
         if args.repack_budget is not None:
             _queue_repack()   # applies at the open loop's first round
         open_loop = run_open_loop(
             engine, lambda i: req_ds.batch(10_000 + i)["ids"], args.steps,
-            args.qps, seed=args.seed, deadline_ms=args.deadline_ms)
+            args.qps, seed=args.seed, deadline_ms=args.deadline_ms,
+            kind=req_kind, on_submit=on_submit)
     else:
         for step in range(args.steps):
             if args.repack_budget is not None and step == args.steps // 2:
                 _queue_repack()
             ids = req_ds.batch(10_000 + step)["ids"]
+            if on_submit is not None:
+                on_submit(step, ids)
             engine.score(ids)
             if store is not None:
                 engine.score_tiered(ids)
@@ -423,6 +512,14 @@ def main(argv=None):
         c = store.counters()
         print(f"[serve] tiers: hit_rate={c['hit_rate']:.3f} "
               f"cold_bytes_moved={c['bytes_moved']}")
+        if args.cache_policy is not None:
+            m = engine.tier_moves
+            print(f"[serve] tier policy: plans={m['plans']} "
+                  f"promotions={m['promotions']} demotions={m['demotions']} "
+                  f"moved_bytes={m['bytes']}")
+        if args.writeback:
+            print(f"[serve] writeback: writes={c['writebacks']} "
+                  f"bytes={c['writeback_bytes']}")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -18,8 +18,10 @@ The request-lifecycle stack, composable bottom-up:
                   dispatch faults to the requests riding the failed chunk;
                   ``DecodeSession`` runs continuous-batching LM decode over a
                   slot-pooled persistent KV cache.
-  ``clock``     — ManualClock: injectable time source (``Engine(clock=...)``)
-                  for wall-clock-independent lifecycle tests.
+  ``clock``     — ManualClock / TickClock: injectable time sources
+                  (``Engine(clock=...)``) for wall-clock-independent
+                  lifecycle tests and fully deterministic open-loop replay
+                  (the CI bench gate's contract).
   ``engine``    — Engine: ``submit``/``poll``/``drain`` lifecycle with
                   ``score`` / ``retrieve`` / ``decode`` preserved as thin
                   synchronous wrappers; per-cell latency percentiles in the
@@ -36,6 +38,11 @@ gather hot rows device-locally and overlap cold-row fills with compute.
 per-group precision assignment, ``TableSwapper`` re-packs it into the live
 subtable layout and swaps it through ``Engine.request_swap`` — zero
 recompiles, applied atomically between ``sched_step`` rounds.
+``PressureAdapter`` closes the loop: windowed live hit/miss deltas drive
+``plan_pressure``/``plan_promote`` on the engine's policy cadence
+(``Engine.attach_adapter``), alongside the traffic-adaptive tier policy
+(``Engine.attach_tier_policy`` + ``repro.cache.policy``) and the
+training-update path ``Engine.writeback_embeddings``.
 """
 from repro.serve.batcher import Chunk, RequestBatcher, Span
 from repro.serve.cache import CellCache, CellKey, CompiledCell, mesh_signature
@@ -44,12 +51,13 @@ from repro.serve.cells import (ServeCellDef, baseline_score_cell,
                                packed_lookup_cell, packed_score_cell,
                                packed_score_step, tiered_score_cell,
                                two_tower_retrieval_cell)
-from repro.serve.clock import ManualClock
+from repro.serve.clock import ManualClock, TickClock
 from repro.serve.engine import Engine
 from repro.serve.queue import (AdmissionQueue, Request, RequestFailedError,
                                TenantQuota)
-from repro.serve.repack import (RepackPlan, RepackPlanner, TableSwapper,
-                                headroom_capacities, subtable_capacities)
+from repro.serve.repack import (PressureAdapter, RepackPlan, RepackPlanner,
+                                TableSwapper, headroom_capacities,
+                                subtable_capacities)
 from repro.serve.scheduler import DecodeSession, Scheduler
 from repro.serve.stats import LatencyStats, RequestStats
 
@@ -57,11 +65,11 @@ __all__ = [
     "CellCache", "CellKey", "CompiledCell", "mesh_signature",
     "Chunk", "Span", "RequestBatcher", "LatencyStats", "RequestStats",
     "AdmissionQueue", "Request", "TenantQuota", "RequestFailedError",
-    "ManualClock", "Scheduler", "DecodeSession",
+    "ManualClock", "TickClock", "Scheduler", "DecodeSession",
     "ServeCellDef", "baseline_score_cell", "packed_score_cell",
     "packed_score_step",
     "packed_lookup_cell", "tiered_score_cell", "two_tower_retrieval_cell",
     "lm_decode_cell", "lm_decode_slotted_cell", "Engine",
-    "RepackPlan", "RepackPlanner", "TableSwapper",
+    "RepackPlan", "RepackPlanner", "TableSwapper", "PressureAdapter",
     "headroom_capacities", "subtable_capacities",
 ]

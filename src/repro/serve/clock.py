@@ -12,6 +12,30 @@ dispatch/shed times (see ``tests/test_queue.py``).
 from __future__ import annotations
 
 
+class TickClock:
+    """A clock that advances by a fixed ``dt`` on every read.
+
+    With a ``TickClock`` injected into ``Engine(clock=...)``, every measured
+    duration in the lifecycle (assembly, compute, queue wait) becomes a fixed
+    number of ticks, so an open-loop replay — whose cursor advances by
+    *measured* work — follows one exact trajectory regardless of host speed:
+    the same arrivals coalesce into the same chunks, the same requests shed,
+    the same ids hit or miss the tiered cache. That determinism is what lets
+    the CI bench gate (``scripts/bench_compare.py --gate``) treat hit-rate /
+    bytes-moved / shed / occupancy numbers as exact, never-flaky metrics
+    while wall-clock latencies stay advisory."""
+
+    def __init__(self, dt: float = 1e-4, start: float = 0.0):
+        if dt <= 0:
+            raise ValueError(f"dt must be > 0, got {dt}")
+        self._t = float(start)
+        self._dt = float(dt)
+
+    def __call__(self) -> float:
+        self._t += self._dt
+        return self._t
+
+
 class ManualClock:
     """A clock that only moves when told to.
 

@@ -101,6 +101,16 @@ class Engine:
         self._tiered_batcher = RequestBatcher()
         self._pending_swaps: list[tuple] = []           # (arch, table, meta)
         self.swaps_applied = 0
+        # traffic-adaptive tiering (repro.cache.policy): one policy drives
+        # every registered tiered store; adapters (repro.serve.repack.
+        # PressureAdapter) ride the same cadence hook
+        self._tier_policy = None
+        self._policy_every = 8
+        self._policy_rounds = 0
+        self._adapters: list = []
+        self._hot_seen: dict[str, int] = {}     # shape -> store.hot_version
+        self.tier_moves = {"plans": 0, "promotions": 0, "demotions": 0,
+                           "bytes": 0}
 
     # -- registration -------------------------------------------------------
 
@@ -191,6 +201,7 @@ class Engine:
             reg = self._compile(cd)
             self._tiered[shape] = TieredCell(reg, store, offsets)
             self._tiered_batcher.register(shape, rows)
+            self._hot_seen[shape] = store.hot_version
 
     # -- serving-time precision adaptation (repro.serve.repack) -------------
 
@@ -283,6 +294,104 @@ class Engine:
         reg = reg._replace(celldef=celldef,
                            bound=reg.bound[:hot_i] + (hot,))
         return TieredCell(reg, tc.store, tc.offsets)
+
+    # -- traffic-adaptive tiering (repro.cache.policy) ----------------------
+
+    def attach_tier_policy(self, policy, *, every: int = 8):
+        """Wire an admission/eviction policy (``cache.DecayAdmissionPolicy``
+        or ``cache.StaticTierPolicy``) into the serving loop: every
+        registered tiered store feeds its lookup stream to the policy, and
+        every ``every``-th ``sched_step`` the policy plans a bounded batch
+        of promotions/demotions that the stores apply incrementally — no
+        re-pack, no recompile (the moves are shape-preserving and the
+        updated hot tier rebinds through the compiled ``in_shardings``).
+        Returns the policy for chaining."""
+        stores = self._tier_stores()
+        if not stores:
+            raise ValueError(
+                "attach_tier_policy requires a registered tiered model "
+                "(register_tiered_model)")
+        for store in stores:
+            store.attach_policy(policy)
+        self._tier_policy = policy
+        self._policy_every = int(every)
+        return policy
+
+    def attach_adapter(self, adapter):
+        """Register a drift adapter (``repro.serve.repack.PressureAdapter``)
+        on the policy cadence hook: ``adapter.step(engine)`` runs once per
+        ``sched_step``, after tier moves apply — the adapter decides its own
+        cadence and may queue atomic table swaps (``request_swap``), which
+        land at the *next* round's swap point."""
+        self._adapters.append(adapter)
+        return adapter
+
+    def _tier_stores(self) -> list:
+        """The distinct ``TieredTableStore``s behind the tiered cells (one
+        store usually backs several shape buckets)."""
+        stores, seen = [], set()
+        for tc in self._tiered.values():
+            if id(tc.store) not in seen:
+                seen.add(id(tc.store))
+                stores.append(tc.store)
+        return stores
+
+    def _policy_step(self):
+        if self._tier_policy is None and not self._adapters:
+            return
+        self._policy_rounds += 1
+        if (self._tier_policy is not None
+                and self._policy_rounds % self._policy_every == 0):
+            for store in self._tier_stores():
+                plan = self._tier_policy.plan(store)
+                self.tier_moves["plans"] += 1
+                if plan.n_moves:
+                    s = store.apply_moves(plan.promote, plan.demote)
+                    self.tier_moves["promotions"] += s["promotions"]
+                    self.tier_moves["demotions"] += s["demotions"]
+                    self.tier_moves["bytes"] += s["bytes"]
+        for adapter in self._adapters:
+            adapter.step(self)
+        self._sync_tiered()
+
+    def _sync_tiered(self):
+        """Rebind every tiered cell whose store mutated its hot tier
+        (promotions, writebacks) since the last sync — the incremental
+        analogue of ``_rebind_tiered``, same shapes, zero recompiles."""
+        for shape, tc in list(self._tiered.items()):
+            if self._hot_seen.get(shape) != tc.store.hot_version:
+                self._tiered[shape] = self._rebind_hot(tc)
+                self._hot_seen[shape] = tc.store.hot_version
+
+    def _rebind_hot(self, tc: TieredCell) -> TieredCell:
+        """Re-``device_put`` the store's current hot tier through the
+        compiled shardings — ``_rebind_tiered`` minus the refresh (the store
+        already mutated itself shape-preservingly)."""
+        reg = tc.reg
+        hot_i = len(reg.bound) - 1          # (params, state, buffers, hot)
+        self._check_swap_layout(reg.celldef.bound[hot_i], tc.store.hot,
+                                "hot-tier")
+        hot = jax.device_put(tc.store.hot, reg.cell.in_shardings[hot_i])
+        celldef = reg.celldef._replace(
+            bound=reg.celldef.bound[:hot_i] + (tc.store.hot,))
+        reg = reg._replace(celldef=celldef,
+                           bound=reg.bound[:hot_i] + (hot,))
+        return TieredCell(reg, tc.store, tc.offsets)
+
+    def writeback_embeddings(self, ids, vectors) -> dict:
+        """Flow training-time embedding updates (global feature ids →
+        full-precision vectors) into every registered tiered store:
+        re-quantized under each feature's current width, mirror written
+        first (no update can be lost to a concurrent demotion — see
+        ``TieredTableStore.writeback``), hot copies patched and rebound
+        without a recompile. Call between scheduling rounds."""
+        out = {"written": 0, "bytes": 0}
+        for store in self._tier_stores():
+            s = store.writeback(ids, vectors)
+            out["written"] += s["written"]
+            out["bytes"] += s["bytes"]
+        self._sync_tiered()
+        return out
 
     # -- request lifecycle: submit / poll / drain ---------------------------
 
@@ -402,8 +511,12 @@ class Engine:
 
         Queued table swaps (``request_swap``) apply here, *before* the round
         dispatches — the atomic swap point of the serving-time precision
-        adaptation path: every chunk of a round reads the same table."""
+        adaptation path: every chunk of a round reads the same table. The
+        tier policy and drift adapters run right after the swap point
+        (``_policy_step``), so tier moves are likewise never observed
+        mid-round."""
         self._apply_swaps()
+        self._policy_step()
         return self.scheduler.step(now=now)
 
     def drain(self, *, now: float | None = None) -> float:
@@ -572,6 +685,7 @@ class Engine:
         out["queue"] = self.queue.counters()
         out["goodput"] = {"by_lane": self.rstats.lane_counts(),
                           "by_tenant": self.rstats.tenant_counts()}
+        out["tier_moves"] = dict(self.tier_moves)
         return out
 
     def summary(self, *, skip_warmup: int = 0) -> dict:

@@ -20,11 +20,23 @@ collection itself never initializes the jax backend.
 minutes, not seconds). They are excluded from tier-1: the blocking CI
 ``integration`` job opts in with ``REPRO_INTEGRATION=1``; a plain local
 ``pytest`` run skips them.
+
+``hyp_examples`` scales every hypothesis ``max_examples`` by
+``REPRO_HYPOTHESIS_SCALE`` (default 1): per-PR CI keeps the counts tuned
+for latency, the scheduled nightly workflow (.github/workflows/nightly.yml)
+sets the scale to 10 for a deep property sweep. A helper function (not a
+profile) because per-test ``@settings(max_examples=...)`` would override
+any profile default.
 """
 import os
 
 import numpy as np
 import pytest
+
+
+def hyp_examples(n: int) -> int:
+    """``n`` hypothesis examples, scaled by ``REPRO_HYPOTHESIS_SCALE``."""
+    return n * max(int(os.environ.get("REPRO_HYPOTHESIS_SCALE", "1")), 1)
 
 
 def pytest_configure(config):

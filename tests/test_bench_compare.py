@@ -1,0 +1,167 @@
+"""The bench gate (scripts/bench_compare.py --gate) — ISSUE-9 acceptance:
+a synthetic deterministic-metric regression must exit non-zero; matching
+artifacts must pass; a stale allowlist or a wall-clock-reaching pattern is
+itself a failure (the gate may only ever check deterministic metrics).
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts"
+    / "bench_compare.py")
+bench_compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_compare)
+
+
+ARTIFACT = {
+    "config": {"mode": "smoke"},
+    "tiers": [{"hot_fraction": 0.1, "hit_rate": 0.74, "bytes_moved": 47112,
+               "hot_bytes": 100, "cold_bytes": 900,
+               "score_p50_ms_synchronous": 86.0}],
+    "drift": {
+        "requests": 48, "shift_at": 12,
+        "points": [
+            {"policy": "static", "hit_rate": 0.228, "steady_hit_rate": 0.03,
+             "bytes_moved": 264252, "compiles_during_run": 0,
+             "e2e_p99_ms": 678.9},
+            {"policy": "decay", "hit_rate": 0.597, "steady_hit_rate": 0.558,
+             "bytes_moved": 130632, "compiles_during_run": 0,
+             "e2e_p99_ms": 695.2},
+        ],
+    },
+    "unix_time": 1,
+}
+
+GATE = {
+    "files": {
+        "BENCH_prefetch.json": {
+            "rules": [
+                {"pattern": r"^tiers\.\d+\.(hit_rate|bytes_moved)$"},
+                {"pattern": r"^drift\.points\.\d+\."
+                            r"(hit_rate|steady_hit_rate|bytes_moved|"
+                            r"compiles_during_run)$"},
+            ]
+        }
+    }
+}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    fresh = tmp_path / "fresh"
+    base = tmp_path / "base"
+    fresh.mkdir(), base.mkdir()
+    for d in (fresh, base):
+        (d / "BENCH_prefetch.json").write_text(json.dumps(ARTIFACT))
+    gate = tmp_path / "gate_metrics.json"
+    gate.write_text(json.dumps(GATE))
+    return fresh, base, gate
+
+
+def _main(fresh, base, gate):
+    return bench_compare.main(["--fresh", str(fresh), "--baseline",
+                               str(base), "--gate", str(gate)])
+
+
+def test_gate_passes_on_matching_artifacts(dirs, capsys):
+    fresh, base, gate = dirs
+    assert _main(fresh, base, gate) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_gate_fails_on_synthetic_regression(dirs, capsys):
+    fresh, base, gate = dirs
+    bad = json.loads(json.dumps(ARTIFACT))
+    bad["drift"]["points"][1]["steady_hit_rate"] -= 0.1    # regression
+    bad["drift"]["points"][1]["compiles_during_run"] = 2   # recompile
+    (fresh / "BENCH_prefetch.json").write_text(json.dumps(bad))
+    assert _main(fresh, base, gate) == 1
+    out = capsys.readouterr().out
+    assert "steady_hit_rate" in out and "compiles_during_run" in out
+
+
+def test_gate_checks_compile_counts_despite_advisory_skip(dirs):
+    """The advisory mode's SKIP regex drops ``compiles``; the gate must not
+    — a recompile during the deterministic replay is exactly what it
+    exists to block."""
+    fresh, base, gate = dirs
+    failures, checked = bench_compare.gate_check(str(fresh), str(base),
+                                                 str(gate))
+    assert not failures
+    # both drift points' compile counters were among the checked metrics
+    bad = json.loads(json.dumps(ARTIFACT))
+    bad["drift"]["points"][0]["compiles_during_run"] = 1
+    (fresh / "BENCH_prefetch.json").write_text(json.dumps(bad))
+    failures, _ = bench_compare.gate_check(str(fresh), str(base), str(gate))
+    assert any("compiles_during_run" in f for f in failures)
+
+
+def test_gate_fails_on_missing_fresh_artifact(dirs):
+    fresh, base, gate = dirs
+    (fresh / "BENCH_prefetch.json").unlink()
+    assert _main(fresh, base, gate) == 1
+
+
+def test_gate_fails_on_stale_pattern(dirs):
+    """An allowlist pattern matching nothing means the bench schema moved
+    out from under the gate — that must fail loudly, not silently gate
+    zero metrics."""
+    fresh, base, gate = dirs
+    cfg = json.loads(json.dumps(GATE))
+    cfg["files"]["BENCH_prefetch.json"]["rules"].append(
+        {"pattern": r"^drift\.points\.\d+\.renamed_metric$"})
+    gate.write_text(json.dumps(cfg))
+    assert _main(fresh, base, gate) == 1
+
+
+def test_gate_rejects_wall_clock_patterns(dirs):
+    """Deterministic metrics only: a pattern reaching a ``*_ms`` key is a
+    config bug and fails the gate even when the values happen to match."""
+    fresh, base, gate = dirs
+    cfg = json.loads(json.dumps(GATE))
+    cfg["files"]["BENCH_prefetch.json"]["rules"].append(
+        {"pattern": r"^drift\.points\.\d+\.e2e_p99_ms$"})
+    gate.write_text(json.dumps(cfg))
+    failures, _ = bench_compare.gate_check(str(fresh), str(base), str(gate))
+    assert any("wall-clock" in f for f in failures)
+
+
+def test_gate_tolerance_band(dirs):
+    fresh, base, gate = dirs
+    cfg = {"files": {"BENCH_prefetch.json": {"rules": [
+        {"pattern": r"^tiers\.\d+\.hit_rate$", "tol_pct": 5.0}]}}}
+    gate.write_text(json.dumps(cfg))
+    near = json.loads(json.dumps(ARTIFACT))
+    near["tiers"][0]["hit_rate"] *= 1.04        # inside the 5% band
+    (fresh / "BENCH_prefetch.json").write_text(json.dumps(near))
+    assert _main(fresh, base, gate) == 0
+    near["tiers"][0]["hit_rate"] = ARTIFACT["tiers"][0]["hit_rate"] * 1.08
+    (fresh / "BENCH_prefetch.json").write_text(json.dumps(near))
+    assert _main(fresh, base, gate) == 1
+
+
+def test_repo_gate_config_matches_checked_in_baseline():
+    """The real allowlist applied to the real baseline is self-consistent:
+    every pattern matches, nothing wall-clock sneaks in (the exact check CI
+    runs against a fresh artifact)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    failures, checked = bench_compare.gate_check(
+        str(root / "benchmarks" / "baselines"),
+        str(root / "benchmarks" / "baselines"),
+        str(root / "benchmarks" / "gate_metrics.json"))
+    assert failures == []
+    assert checked > 20
+
+
+def test_advisory_mode_still_exits_zero(dirs, capsys):
+    fresh, base, _ = dirs
+    bad = json.loads(json.dumps(ARTIFACT))
+    bad["tiers"][0]["hit_rate"] = 0.1           # would fail the gate
+    (fresh / "BENCH_prefetch.json").write_text(json.dumps(bad))
+    assert bench_compare.main(["--fresh", str(fresh), "--baseline",
+                               str(base)]) == 0
+    assert "Bench compare" in capsys.readouterr().out

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
+from conftest import hyp_examples
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ops import flash_attention_kernel
@@ -68,7 +69,7 @@ def test_flash_custom_vjp_end_to_end():
                                    rtol=5e-4, atol=5e-4)
 
 
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=hyp_examples(6), deadline=None)
 @given(seed=st.integers(0, 999), hd=st.sampled_from([8, 16, 32]))
 def test_flash_property_sweep(seed, hd):
     key = jax.random.PRNGKey(seed)

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
+from conftest import hyp_examples
 
 from repro.core import packing, quantizer
 from repro.core.mpe import MPEConfig
@@ -32,7 +33,7 @@ def test_lookup_kernel_matches_ref(b, d, rng):
     np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-6)
 
 
-@settings(max_examples=8, deadline=None)
+@settings(max_examples=hyp_examples(8), deadline=None)
 @given(n_rows=st.integers(8, 600), d=st.sampled_from([16, 32]),
        seed=st.integers(0, 999))
 def test_qat_kernel_sweep(n_rows, d, seed):

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
+from conftest import hyp_examples
 
 from repro.core import (MPEConfig, MPESearchEmbedding, MPERetrainEmbedding,
                         build_packed_table, feature_bits, make_groups,
@@ -109,7 +110,7 @@ def test_regularizer_weights_infrequent_groups_harder(rng):
     assert reg_with_boost(1) > reg_with_boost(0)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=hyp_examples(10), deadline=None)
 @given(seed=st.integers(0, 1000), lam=st.sampled_from([0.0, 1e-5, 1e-4]))
 def test_lookup_differentiable(seed, lam):
     cfg = MPEConfig(lam=lam)

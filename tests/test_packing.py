@@ -5,12 +5,13 @@ import pytest
 
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
+from conftest import hyp_examples
 
 from repro.core import packing
 from repro.core.quantizer import int_bounds
 
 
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=hyp_examples(60), deadline=None)
 @given(b=st.integers(1, 8), d=st.integers(1, 96), n=st.integers(1, 40),
        seed=st.integers(0, 2**16))
 def test_pack_unpack_roundtrip(b, d, n, seed):
@@ -24,7 +25,7 @@ def test_pack_unpack_roundtrip(b, d, n, seed):
 
 
 @given(b=st.integers(1, 8), d=st.integers(1, 128))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=hyp_examples(40), deadline=None)
 def test_words_per_row_is_tight(b, d):
     w = packing.words_per_row(d, b)
     assert w * 32 >= d * b

@@ -1,0 +1,328 @@
+"""Traffic-adaptive tier policy (ISSUE-9 acceptance criteria).
+
+Covers: the exponential-decay score math against a hand trace, plan
+feasibility/bounds (``max_moves``, per-width slot accounting, hysteresis),
+lookups bit-exact through arbitrary promotion/demotion rounds, the
+writeback ordering contract (mirror first — a demotion can never lose an
+update), last-write-wins dedupe, the seeded popularity-shift scenario
+(adaptive recovers, static doesn't), zero ``CellCache`` recompiles across
+moves + writebacks in a live engine, the ``TickClock`` determinism the CI
+bench gate stands on, and the ``PressureAdapter`` miss-share → repack
+control loop.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import (DecayAdmissionPolicy, StaticTierPolicy,
+                         TieredTableStore)
+from repro.core.inference import build_packed_table, packed_lookup
+from repro.core.mpe import MPEConfig
+from repro.core.quantizer import dequantize_codes, quantize_codes
+from repro.embeddings.frequency import zipf_frequencies
+
+
+def _random_packed_table(n=160, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = MPEConfig()
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    fbits = rng.integers(0, len(cfg.bits), size=n).astype(np.int32)
+    alpha = (np.abs(rng.normal(size=len(cfg.bits))) * 0.1
+             + 0.01).astype(np.float32)
+    beta = (rng.normal(size=d) * 0.01).astype(np.float32)
+    table, meta = build_packed_table(emb, fbits, alpha, beta, cfg)
+    return table, meta
+
+
+# -- score math ---------------------------------------------------------------
+
+def test_decay_scores_match_hand_trace():
+    p = DecayAdmissionPolicy(4, halflife=1.0)       # decay = 0.5 per tick
+    p.observe([0, 0, 1])                            # t=1: s0=2, s1=1
+    p.observe([1])                                  # t=2: s1=1*0.5+1=1.5
+    s = p.scores()                                  # decayed to t=2
+    assert s[0] == pytest.approx(1.0)               # 2 * 0.5
+    assert s[1] == pytest.approx(1.5)
+    assert s[2] == 0.0 and s[3] == 0.0
+    p.observe([])                                   # empty chunk still ticks
+    assert p.scores()[0] == pytest.approx(0.5)
+    assert p.observations == 3
+
+
+def test_policy_validates_knobs():
+    with pytest.raises(ValueError):
+        DecayAdmissionPolicy(8, halflife=0.0)
+    with pytest.raises(ValueError):
+        DecayAdmissionPolicy(8, margin=0.9)
+
+
+def test_static_policy_never_moves():
+    table, meta = _random_packed_table()
+    store = TieredTableStore(table, meta, zipf_frequencies(meta["n"]), 0.3)
+    pol = store.attach_policy(StaticTierPolicy())
+    store.lookup(np.arange(meta["n"], dtype=np.int32).reshape(-1, 4))
+    plan = pol.plan(store)
+    assert plan.n_moves == 0
+
+
+# -- plan feasibility + incremental moves ------------------------------------
+
+def test_plan_bounded_and_feasible():
+    table, meta = _random_packed_table()
+    store = TieredTableStore(table, meta, zipf_frequencies(meta["n"], seed=1),
+                             0.25)
+    pol = store.attach_policy(
+        DecayAdmissionPolicy(meta["n"], halflife=4.0, max_moves=10))
+    rng = np.random.default_rng(5)
+    cold_ids = np.nonzero(~store._is_hot_np)[0]
+    for _ in range(6):                              # hammer the cold tier
+        store.lookup(rng.choice(cold_ids, size=(32, 4)).astype(np.int32))
+    plan = pol.plan(store)
+    assert 0 < plan.n_moves <= 10
+    assert not store._is_hot_np[plan.promote].any()
+    assert store._is_hot_np[plan.demote].all()
+    bits = meta["bits"]
+    widx = store._width_idx_np
+    free = store.free_slot_counts()
+    for i, b in enumerate(bits):                    # per-width slot budget
+        n_pro = int((widx[plan.promote] == i).sum())
+        n_dem = int((widx[plan.demote] == i).sum())
+        assert b != 0 or (n_pro == 0 and n_dem == 0)
+        if b != 0:
+            assert n_pro <= free.get(f"b{b}", 0) + n_dem
+    # hysteresis: every swap's riser beats its victim by the margin
+    for k in range(plan.demote.size):
+        assert plan.promote_score[-(k + 1)] > 0
+    s = store.apply_moves(plan.promote, plan.demote)
+    assert s["promotions"] == plan.promote.size
+    assert s["demotions"] == plan.demote.size
+    assert store._is_hot_np[plan.promote].all()
+    assert not store._is_hot_np[plan.demote].any()
+    # infeasible plans are rejected loudly, not applied
+    with pytest.raises(ValueError):
+        store.apply_moves(plan.promote, np.zeros(0, np.int64))  # already hot
+
+
+def test_lookups_bit_exact_through_move_rounds():
+    table, meta = _random_packed_table(seed=2)
+    n = meta["n"]
+    store = TieredTableStore(table, meta, zipf_frequencies(n, seed=1), 0.3)
+    store.attach_policy(
+        DecayAdmissionPolicy(n, halflife=4.0, max_moves=64))
+    probe = np.arange(n, dtype=np.int32).reshape(-1, 4)
+    ref = np.asarray(packed_lookup(table, meta, jnp.asarray(probe)))
+    rng = np.random.default_rng(6)
+    for round_ in range(8):
+        ids = ((rng.integers(0, n, size=(48, 3)) + round_ * 20) % n)
+        store.lookup(ids.astype(np.int32))
+        plan = store.policy.plan(store)
+        store.apply_moves(plan.promote, plan.demote)
+        got = np.asarray(store.lookup(probe))
+        assert np.array_equal(got, ref), f"values drifted at round {round_}"
+
+
+# -- writeback ----------------------------------------------------------------
+
+def test_writeback_round_trip_bit_exact_per_width():
+    table, meta = _random_packed_table(seed=3)
+    n, d, bits = meta["n"], meta["d"], meta["bits"]
+    store = TieredTableStore(table, meta, zipf_frequencies(n, seed=1), 0.4)
+    rng = np.random.default_rng(7)
+    widx = store._width_idx_np
+    # one hot + one cold feature per non-zero width bucket (when present)
+    picks = []
+    for i, b in enumerate(bits):
+        if b == 0:
+            continue
+        feats = np.nonzero(widx == i)[0]
+        for hot in (True, False):
+            sub = feats[store._is_hot_np[feats] == hot]
+            if sub.size:
+                picks.append(int(sub[0]))
+    ids = np.asarray(picks, np.int64)
+    vecs = rng.normal(size=(ids.size, d)).astype(np.float32)
+    s = store.writeback(ids, vecs)
+    assert s["written"] == ids.size and s["bytes"] > 0
+    got = np.asarray(store.lookup(ids.astype(np.int32)[:, None]))[:, 0]
+    for k, f in enumerate(ids):
+        i = int(widx[f])
+        b = int(bits[i])
+        codes = quantize_codes(jnp.asarray(vecs[k][None]),
+                               store._alpha_np[i], store._beta_np, b)
+        want = np.asarray(dequantize_codes(codes, store._alpha_np[i],
+                                           store._beta_np))[0]
+        assert np.array_equal(got[k], want), f"feature {f} (b={b})"
+    assert store.counters()["writebacks"] == ids.size
+
+
+def test_writeback_survives_demotion_and_dedupes():
+    """The ordering contract: mirror written first, so demoting a feature
+    right after a writeback re-exposes the *updated* row — no lost update.
+    Duplicate ids in one writeback resolve last-write-wins."""
+    table, meta = _random_packed_table(seed=4)
+    n, d = meta["n"], meta["d"]
+    store = TieredTableStore(table, meta, zipf_frequencies(n, seed=1), 0.4)
+    widx, bits = store._width_idx_np, meta["bits"]
+    hot_nz = np.nonzero(store._is_hot_np
+                        & (np.asarray(bits)[widx] != 0))[0]
+    f = int(hot_nz[0])
+    rng = np.random.default_rng(8)
+    v1, v2 = rng.normal(size=(2, d)).astype(np.float32)
+    store.writeback(np.array([f, f]), np.stack([v1, v2]))   # last wins
+    hot_read = np.asarray(store.lookup(np.array([[f]], np.int32)))[0, 0]
+    store.apply_moves(np.zeros(0, np.int64), np.array([f]))  # demote
+    cold_read = np.asarray(store.lookup(np.array([[f]], np.int32)))[0, 0]
+    assert np.array_equal(hot_read, cold_read)               # nothing lost
+    i = int(widx[f])
+    codes = quantize_codes(jnp.asarray(v2[None]), store._alpha_np[i],
+                           store._beta_np, int(bits[i]))
+    want = np.asarray(dequantize_codes(codes, store._alpha_np[i],
+                                       store._beta_np))[0]
+    assert np.array_equal(cold_read, want)                   # v2, not v1
+
+
+# -- popularity shift: adaptive recovers, static doesn't ---------------------
+
+def _shift_run(policy, n_chunks=60, shift_chunk=20, steady_chunk=40, seed=9):
+    """Seeded zipf traffic whose identity rotates by n/2 at ``shift_chunk``;
+    returns (pre-shift hit rate, steady-state hit rate after the shift)."""
+    table, meta = _random_packed_table(seed=1)
+    n = meta["n"]
+    freqs = zipf_frequencies(n)                    # rank == id: 0 hottest
+    store = TieredTableStore(table, meta, freqs, 0.2)
+    store.attach_policy(policy)
+    rng = np.random.default_rng(seed)
+    snaps = {}
+    for chunk in range(n_chunks):
+        ids = rng.choice(n, size=(64, 4), p=freqs)
+        if chunk >= shift_chunk:
+            ids = (ids + n // 2) % n
+        store.lookup(ids.astype(np.int32))
+        plan = store.policy.plan(store)
+        store.apply_moves(plan.promote, plan.demote)
+        if chunk + 1 in (shift_chunk, steady_chunk):
+            snaps[chunk + 1] = store.counters()
+    c = store.counters()
+    pre = snaps[shift_chunk]["hit_rate"]
+    hot_d = c["hot_lookups"] - snaps[steady_chunk]["hot_lookups"]
+    cold_d = c["cold_lookups"] - snaps[steady_chunk]["cold_lookups"]
+    return pre, hot_d / (hot_d + cold_d)
+
+
+def test_popularity_shift_adaptive_recovers_static_does_not():
+    pre_s, steady_static = _shift_run(StaticTierPolicy())
+    pre_a, steady_adaptive = _shift_run(
+        DecayAdmissionPolicy(160, halflife=8.0, max_moves=64))
+    assert pre_s > 0.5 and pre_a > 0.5          # both fine before the shift
+    assert steady_adaptive > steady_static + 0.25
+    assert steady_adaptive > 0.5                # recovered
+    assert steady_static < 0.3                  # stale split stays broken
+
+
+# -- engine integration: zero recompiles + deterministic replay ---------------
+
+@pytest.fixture(scope="module")
+def pipeline():
+    from repro.launch.serve import train_packed_dlrm
+    return train_packed_dlrm(field_vocabs=(150, 100, 120), train_steps=10,
+                             train_batch=128, d_embed=8, mlp_hidden=(16,),
+                             seed=4)
+
+
+def _drift_engine_run(pipeline, policy_name):
+    """A small TickClock open-loop drift replay with writebacks; returns
+    (deterministic counters dict, engine)."""
+    from repro.data.synthetic import DriftingCTR, SyntheticCTR
+    from repro.launch.serve import run_open_loop
+    from repro.models.dlrm import DLRM
+    from repro.serve import Engine, TickClock
+
+    cfg, params, state, buffers, spec, res = pipeline
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    master = np.asarray(res["final_params"]["embedding"]["emb"])
+    offs = np.asarray(buffers["offsets"], np.int64)
+    store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                             freqs, 0.2)
+    engine = Engine(clock=TickClock())
+    engine.register_tiered_model("dlrm", DLRM, cfg, params, state, buffers,
+                                 store, shapes={"tiered": 64})
+    if policy_name == "decay":
+        policy = DecayAdmissionPolicy(store.meta["n"], halflife=8.0,
+                                      max_moves=128)
+    else:
+        policy = StaticTierPolicy()
+    engine.attach_tier_policy(policy, every=1)
+    ds = DriftingCTR(spec._replace(batch_size=48), shift_at=8,
+                     shift_frac=0.4, step0=10_000)
+
+    def on_submit(i, ids):
+        if i and i % 6 == 0:
+            gids = np.unique(np.asarray(ids, np.int64) + offs[None, :])
+            engine.writeback_embeddings(gids, master[gids])
+
+    compiles0 = engine.compile_count
+    ol = run_open_loop(engine, lambda i: ds.batch(10_000 + i)["ids"], 24,
+                       500.0, kind="tiered", on_submit=on_submit)
+    c = store.counters()
+    det = {k: c[k] for k in ("hot_lookups", "cold_lookups", "bytes_moved",
+                             "promotions", "demotions", "writebacks",
+                             "writeback_bytes")}
+    det["completed"], det["shed"] = ol["completed"], ol["shed"]
+    det["recompiles"] = engine.compile_count - compiles0
+    return det, engine
+
+
+def test_engine_moves_and_writebacks_zero_recompiles(pipeline):
+    det, engine = _drift_engine_run(pipeline, "decay")
+    assert det["recompiles"] == 0               # the acceptance criterion
+    assert det["promotions"] > 0                # the policy actually moved
+    assert det["writebacks"] > 0                # updates actually flowed
+    assert engine.tier_moves["plans"] > 0
+    assert engine.tier_moves["promotions"] == det["promotions"]
+
+
+def test_engine_drift_replay_deterministic(pipeline):
+    """Two identical TickClock replays produce identical counters — the
+    property the blocking CI bench gate (scripts/bench_compare.py --gate)
+    relies on."""
+    a, _ = _drift_engine_run(pipeline, "decay")
+    b, _ = _drift_engine_run(pipeline, "decay")
+    assert a == b
+
+
+def test_engine_adaptive_beats_static_hit_rate(pipeline):
+    det_s, _ = _drift_engine_run(pipeline, "static")
+    det_a, _ = _drift_engine_run(pipeline, "decay")
+    hr = lambda d: d["hot_lookups"] / (d["hot_lookups"] + d["cold_lookups"])  # noqa: E731
+    assert hr(det_a) > hr(det_s)
+    assert det_s["promotions"] == 0
+
+
+# -- pressure adapter: live counters -> precision repack ----------------------
+
+def test_pressure_adapter_narrows_under_misses(pipeline):
+    from repro.data.synthetic import SyntheticCTR
+    from repro.launch.serve import build_engine, repack_tools
+    from repro.serve import PressureAdapter
+
+    cfg, params, state, buffers, spec, res = pipeline
+    freqs = SyntheticCTR(spec).expected_frequencies()
+    store = TieredTableStore(res["packed_table"], res["packed_meta"],
+                             freqs, 0.1)
+    engine = build_engine(cfg, params, state, buffers, p99_rows=64,
+                          bulk_rows=128, store=store)
+    planner, swapper = repack_tools(engine, res, freqs)
+    adapter = engine.attach_adapter(
+        PressureAdapter(planner, swapper, res["group_bits"], every=1,
+                        promote_below=0.02, min_moved=1))
+    # cold-heavy traffic: a tiny hot tier makes the miss share dominate
+    ids = SyntheticCTR(spec._replace(batch_size=128)).batch(77_777)["ids"]
+    engine.score_tiered(ids)
+    compiles0 = engine.compile_count
+    engine.sched_step()                 # adapter plans from the live window
+    assert adapter.repacks == 1
+    narrowed = planner.bytes_packed(adapter.assignment)
+    assert narrowed < adapter.base_bytes
+    engine.sched_step()                 # queued swap lands atomically
+    assert engine.swaps_applied >= 1
+    assert engine.compile_count == compiles0

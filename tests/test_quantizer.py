@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
+from conftest import hyp_examples
 
 from repro.core import quantizer
 
@@ -63,7 +64,7 @@ def test_beta_gradient_matches_eq6(rng):
     np.testing.assert_allclose(np.asarray(g), [0.0, 1.0])
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=hyp_examples(25), deadline=None)
 @given(b=st.integers(1, 8), scale=st.floats(1e-4, 1e-1),
        seed=st.integers(0, 2**16))
 def test_quantization_error_bounded(b, scale, seed):

@@ -14,6 +14,7 @@ import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from conftest import hyp_examples  # noqa: E402
 
 import lifecycle_props as props  # noqa: E402
 from repro.serve.queue import TenantQuota  # noqa: E402
@@ -45,7 +46,7 @@ cfg_st = st.fixed_dictionaries({
 })
 
 
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=hyp_examples(60), deadline=None)
 @given(specs=st.lists(spec_st, min_size=1, max_size=60), cfg=cfg_st)
 def test_stream_invariants(specs, cfg):
     result = props.drive_queue(specs, cfg)
@@ -55,7 +56,7 @@ def test_stream_invariants(specs, cfg):
     props.check_counters_consistent(result)
 
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=hyp_examples(40), deadline=None)
 @given(sizes=st.lists(st.integers(1, 100), min_size=1, max_size=30))
 def test_fifo_identity_degenerate_stream(sizes):
     props.check_fifo_identity(sizes)
