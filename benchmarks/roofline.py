@@ -91,7 +91,9 @@ def analyze_cell(cell: dict) -> dict:
 def shard_bench_rows(path: str) -> list:
     """Per-collective byte counts of the shard_map'd cells from a
     ``BENCH_shard.json`` artifact (benchmarks/shard_bench.py) — the sharded
-    lookup/serve/train counterpart of the dry-run cells."""
+    lookup/serve/train counterpart of the dry-run cells, plus the
+    psum-vs-a2a crossover rows (measured all-to-all bytes per bucket
+    capacity and bit-width)."""
     with open(path) as f:
         bench = json.load(f)
     rows = []
@@ -108,6 +110,23 @@ def shard_bench_rows(path: str) -> list:
                          "p50_ms": rec.get("ms_per_step"),
                          "collectives": collective_breakdown(
                              rec["collectives"])})
+    # psum-vs-a2a crossover sweep: one psum reference row per bit-width, one
+    # a2a row per (bit-width, bucket capacity) — this is where the
+    # all-to-all byte attribution shows up next to psum/all-gather
+    for mesh_name, bits_rows in bench.get("crossover", {}).items():
+        for bname, caps in bits_rows.items():
+            ref = caps.get("full") or next(iter(caps.values()))
+            rows.append({"cell": f"shard/lookup_psum[{bname}]",
+                         "mesh": mesh_name,
+                         "p50_ms": ref.get("psum_p50_ms"),
+                         "collectives": collective_breakdown(
+                             ref["psum_collectives"])})
+            for cname, rec in caps.items():
+                rows.append({"cell": f"shard/lookup_a2a[{bname},{cname}]",
+                             "mesh": mesh_name,
+                             "p50_ms": rec.get("a2a_p50_ms"),
+                             "collectives": collective_breakdown(
+                                 rec["a2a_collectives"])})
     return rows
 
 

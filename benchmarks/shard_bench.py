@@ -152,6 +152,91 @@ def bench_kernels(cfg: dict) -> dict:
     return out
 
 
+CROSS_BITS = {"b4": 4, "b8": 8, "b16": 16}
+CROSS = dict(n=4096, d=16, batch=256)  # fixed: the crossover rows are gated
+
+
+def bench_crossover(cfg: dict) -> dict:
+    """psum-vs-a2a sweep: model-axis width × bucket capacity × bit-width.
+
+    Every row records the measured p50 of both comms paths, the exact
+    per-collective byte counts from the compiled HLO, and the deterministic
+    routing counters of ``shard.lookup_route_stats`` — the counters, byte
+    totals, compile counts and the ``a2a_fewer_bytes`` verdict are pure
+    functions of this fixed config (``CROSS``, independent of --smoke), so
+    ``bench-gate`` exact-diffs them against the checked-in baseline. The
+    crossover itself: at d=16 a packed row is W=ceil(b·16/32) words, so a2a
+    ships ~4·(ids + 2·W·batch) bytes against psum's 64·batch — below b≈16
+    the id shuffle wins, above it the dense partial merge does.
+    """
+    rng = np.random.default_rng(7)
+    n, d, batch = CROSS["n"], CROSS["d"], CROSS["batch"]
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    beta = (rng.normal(size=d) * 0.01).astype(np.float32)
+    ids = jnp.asarray(rng.integers(0, n, size=(batch,)), jnp.int32)
+
+    def _compiles(jitted) -> int:
+        try:
+            return int(jitted._cache_size())
+        except Exception:  # noqa: BLE001 — internal API; absence → "compiled once"
+            return 1
+
+    out = {}
+    for mp in (2, 4):
+        if mp > jax.device_count():
+            continue
+        mesh = make_device_mesh((1, mp), ("data", "model"))
+        rows = {}
+        with use_mesh(mesh):
+            for bname, b in CROSS_BITS.items():
+                mcfg = MPEConfig(bits=(0, b))
+                fbits = np.ones(n, np.int32)  # every feature at width b
+                alpha = np.asarray(
+                    [quantizer.init_alpha(0.1, bb) for bb in mcfg.bits],
+                    np.float32)
+                table, meta = build_packed_table(emb, fbits, alpha, beta, mcfg)
+                slice_len = -(-batch // mp)
+                caps = {"full": None, "half": max(1, slice_len // 2),
+                        "quarter": max(1, slice_len // 4)}
+                jp = jax.jit(lambda t, i, _m=meta:
+                             shard.sharded_packed_lookup(t, _m, i))
+                psum_ms = _time_ms(jp, (table, ids), cfg["iters"])
+                pcoll = _collectives(jp, table, ids)
+                want = np.asarray(jp(table, ids))
+                per_bits = {}
+                for cname, cap in caps.items():
+                    ja = jax.jit(lambda t, i, _m=meta, _c=cap:
+                                 shard.sharded_packed_lookup(
+                                     t, _m, i, lookup_comms="a2a",
+                                     bucket_capacity=_c))
+                    a2a_ms = _time_ms(ja, (table, ids), cfg["iters"])
+                    acoll = _collectives(ja, table, ids)
+                    got = np.asarray(ja(table, ids))
+                    rec = dict(shard.lookup_route_stats(
+                        table, meta, ids, n_shards=mp, bucket_capacity=cap))
+                    rec.update(
+                        bit_width=b,
+                        psum_p50_ms=psum_ms, a2a_p50_ms=a2a_ms,
+                        psum_collectives=pcoll, a2a_collectives=acoll,
+                        psum_collective_bytes=pcoll["total_bytes"],
+                        a2a_collective_bytes=acoll["total_bytes"],
+                        a2a_fewer_bytes=bool(acoll["total_bytes"]
+                                             < pcoll["total_bytes"]),
+                        bit_exact=bool(np.array_equal(want, got)),
+                        psum_compiles=_compiles(jp),
+                        a2a_compiles=_compiles(ja))
+                    per_bits[cname] = rec
+                rows[bname] = per_bits
+                full = per_bits["full"]
+                print(f"[shard_bench] crossover 1x{mp} {bname}: "
+                      f"psum={full['psum_collective_bytes']:.0f}B "
+                      f"a2a={full['a2a_collective_bytes']:.0f}B "
+                      f"a2a_fewer={full['a2a_fewer_bytes']} "
+                      f"exact={full['bit_exact']}")
+        out[f"1x{mp}"] = rows
+    return out
+
+
 def bench_train_step(cfg: dict) -> dict:
     from repro.data.synthetic import CTRSpec, SyntheticCTR
     from repro.embeddings.table import FieldSpec
@@ -221,18 +306,21 @@ def bench_serve_cell(cfg: dict) -> dict:
     return out
 
 
-def run(cfg: dict) -> dict:
-    return {
+def run(cfg: dict, crossover_only: bool = False) -> dict:
+    out = {
         "config": {k: (list(v) if isinstance(v, tuple) else v)
                    for k, v in cfg.items()},
         "env": {"jax": jax.__version__, "backend": jax.default_backend(),
                 "device_count": jax.device_count(),
                 "platform": platform.platform()},
-        "kernels": bench_kernels(cfg),
-        "train": bench_train_step(cfg),
-        "serve": bench_serve_cell(cfg),
-        "unix_time": int(time.time()),
     }
+    if not crossover_only:
+        out["kernels"] = bench_kernels(cfg)
+        out["train"] = bench_train_step(cfg)
+        out["serve"] = bench_serve_cell(cfg)
+    out["crossover"] = bench_crossover(cfg)
+    out["unix_time"] = int(time.time())
+    return out
 
 
 def main(argv=None):
@@ -242,6 +330,10 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=4,
                     help="virtual CPU device count (consumed before jax "
                          "initializes)")
+    ap.add_argument("--crossover-only", action="store_true",
+                    help="run just the psum-vs-a2a crossover sweep (the "
+                         "bench-gate data point; its counters are "
+                         "independent of --smoke)")
     ap.add_argument("--out", default=None,
                     help="output path (default benchmarks/artifacts/"
                          "BENCH_shard.json)")
@@ -250,7 +342,8 @@ def main(argv=None):
     out_path = args.out or os.path.join("benchmarks", "artifacts",
                                         "BENCH_shard.json")
     result = run(dict(SMOKE if args.smoke else FULL,
-                      mode="smoke" if args.smoke else "full"))
+                      mode="smoke" if args.smoke else "full"),
+                 crossover_only=args.crossover_only)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

@@ -64,6 +64,19 @@ def build_corpus(mesh=None, *, seed: int = 4):
                              freqs, 0.3)
     engine = build_engine(cfg, params, state, buffers, p99_rows=64,
                           bulk_rows=256, store=store, mesh=mesh)
+    if engine.mesh.size > 1:
+        # a2a comms variants under their own shape names: BC501 budgets the
+        # all-to-all id/word shuffle separately from (and below) the dense
+        # psum merge of the plain cells (ISSUE 10 crossover)
+        from repro.models.dlrm import DLRM
+        engine.register_packed_model(
+            "dlrm", DLRM, cfg, params, state, buffers,
+            shapes={"serve_p99_a2a": 64}, lookup_split=False,
+            shard_lookup=True, lookup_comms="a2a", bucket_capacity=16)
+        engine.register_tiered_model(
+            "dlrm", DLRM, cfg, params, state, buffers, store,
+            shapes={"tiered_p99_a2a": 64}, shard_lookup=True,
+            lookup_comms="a2a", bucket_capacity=16)
 
     lm_cfg = LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
                       head_dim=16, d_ff=64, vocab=50, remat=False)

@@ -19,6 +19,59 @@ import jax
 from jax.sharding import Mesh
 
 _MESH_STACK: list[Mesh] = []
+_DIST_INITIALIZED = False
+
+
+def init_distributed(coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None,
+                     local_device_ids=None) -> bool:
+    """Bring up the multi-host runtime (``jax.distributed.initialize``).
+
+    Call once per process, before the first device query. With no
+    ``coordinator`` and ``num_processes`` in (None, 0, 1) this is a
+    documented no-op — the single-host default of the launch CLIs — so
+    tests and one-box serving never touch the distributed client.
+    Idempotent: a second call after a successful init returns True without
+    re-initializing. Returns True when a multi-process runtime is up.
+
+    The launch CLIs reach this through ``--coordinator``/``--num-hosts``/
+    ``--host-id``; afterwards ``jax.devices()`` spans every host and
+    ``host_mesh(..., n_pod=...)`` lays the "pod" axis on host boundaries
+    (see ``host_boundary_groups``), which is what lets the MPE packed
+    subtables row-shard *across* hosts under
+    ``host_packed_table_pspecs``."""
+    global _DIST_INITIALIZED
+    if coordinator is None and num_processes in (None, 0, 1):
+        return _DIST_INITIALIZED
+    if _DIST_INITIALIZED:
+        return True
+    kwargs = {}
+    if coordinator is not None:
+        kwargs["coordinator_address"] = coordinator
+    if num_processes is not None:
+        kwargs["num_processes"] = num_processes
+    if process_id is not None:
+        kwargs["process_id"] = process_id
+    if local_device_ids is not None:
+        kwargs["local_device_ids"] = local_device_ids
+    jax.distributed.initialize(**kwargs)
+    _DIST_INITIALIZED = True
+    return True
+
+
+def host_boundary_groups() -> list[list]:
+    """Visible devices grouped by owning process (host), process-major.
+
+    Group ``g`` holds the devices whose ``process_index`` is the g-th
+    smallest — the host boundary a leading ("pod", ...) mesh axis must
+    align with so the inner ("data", "model") axes stay host-local:
+    row-shard groups and a2a peer rings then cross the network only along
+    "pod". Single-process returns one group with every device."""
+    groups: dict[int, list] = {}
+    for dev in jax.devices():
+        groups.setdefault(dev.process_index, []).append(dev)
+    return [groups[p] for p in sorted(groups)]
 
 
 @contextlib.contextmanager
@@ -113,6 +166,10 @@ def host_mesh(n_data: int | None = None, n_model: int = 1,
     if n_pod is None:
         grid = np.asarray(devs[: n_data * n_model]).reshape(n_data, n_model)
         return Mesh(grid, ("data", "model"))
+    if len({d.process_index for d in devs}) > 1:
+        # multi-host: order host-major so "pod" boundaries are host
+        # boundaries and the inner axes stay host-local
+        devs = [d for group in host_boundary_groups() for d in group]
     grid = np.asarray(devs[: n_pod * n_data * n_model]).reshape(
         n_pod, n_data, n_model)
     return Mesh(grid, ("pod", "data", "model"))

@@ -14,25 +14,47 @@ Placement per wrapper:
 
   ``sharded_packed_lookup``    subtables row-sharded over ``rows_axes``
                                ("model"), ids batch-sharded over the data
-                               axes; device-local gather+unpack+dequant with
-                               an ownership mask, then ONE ``psum`` over the
-                               row axes merges the buckets. Each id owns
+                               axes. Two comms paths, selected by
+                               ``lookup_comms``: ``"psum"`` (default) does a
+                               device-local gather+unpack+dequant with an
+                               ownership mask, then ONE ``psum`` over the
+                               row axes merges the buckets — each id owns
                                exactly one (bucket, row), so the psum adds
-                               one non-zero term to zeros — bit-exact against
-                               the jitted single-device reference. (A
-                               capacity-bucketed all-to-all id shuffle would
-                               move ~32/b× fewer bytes but drops ids on
-                               overflow; the masked psum is capacity-free.)
-  ``sharded_tiered_hot_lookup``  same layout for the hot tier of a
+                               one non-zero term to zeros, bit-exact against
+                               the jitted single-device reference. ``"a2a"``
+                               ships only the *packed uint32 words*: a
+                               capacity-bucketed ``all_to_all`` id shuffle
+                               (``plan_buckets``) routes each id to its
+                               owner shard, the owner gathers the packed
+                               row, a second ``all_to_all`` returns the
+                               words and the *requesting* shard dequantizes
+                               — ~32/b× fewer bytes than psum-ing the
+                               dequantized (batch, d) f32 activation when
+                               the row axes are wide. Ids that overflow a
+                               bucket deterministically spill to a masked
+                               integer psum of the same packed words, so
+                               the a2a path is bit-exact at ANY capacity
+                               (nothing is dropped; see ``plan_buckets``).
+  ``sharded_tiered_hot_lookup``  same layout (and the same two comms paths)
+                               for the hot tier of a
                                ``repro.cache.TieredTableStore`` (zeros at
                                cold positions, merged by the caller).
   ``sharded_embedding_bag``    table rows over ``rows_axes``, bags over the
                                data axes; per-device partial bag sums +
-                               psum. NOT bit-exact for >1 row shard (the
-                               psum reassociates the bag sum) — documented
-                               tolerance ~1e-6 relative.
+                               psum. Differentiable: a ``custom_vjp`` runs
+                               the backward as a per-device ``segment_sum``
+                               of the owned slot cotangents into the local
+                               row block (psum-merged over the batch axes
+                               when the bags are split). NOT bit-exact for
+                               >1 row shard (the psum reassociates the bag
+                               sum) — documented tolerance ~1e-6 relative,
+                               pinned by tests/test_shard_a2a.py.
   ``sharded_flash_attention``  batch over the data axes, heads over
                                "model"; no collectives, bit-exact.
+                               Differentiable: a ``custom_vjp`` runs the
+                               fused fwd-stats/bwd Pallas kernels in their
+                               own shard_maps with the (o, lse) residuals
+                               stored sharded.
   ``sharded_mixed_expectation`` rows over every mesh axis (row-parallel
                                QAT); no collectives, bit-exact.
   ``sharded_value_and_grad``   the train step's grad: batch data-parallel
@@ -54,6 +76,8 @@ reassembles replicated outputs incorrectly for some mesh shapes.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -66,6 +90,8 @@ from repro.dist.sharding import replicate_like
 
 __all__ = [
     "active_mesh", "pad_rows_to_shard", "rows_shard_index",
+    "LOOKUP_COMMS", "BucketPlan", "plan_buckets", "spill_capacity",
+    "lookup_route_stats",
     "sharded_packed_lookup", "sharded_tiered_hot_lookup",
     "sharded_embedding_bag", "sharded_flash_attention",
     "sharded_mixed_expectation", "sharded_value_and_grad",
@@ -136,6 +162,235 @@ def rows_shard_index(mesh, rows_axes):
 
 
 # ---------------------------------------------------------------------------
+# capacity-bucketed all-to-all routing plan
+# ---------------------------------------------------------------------------
+
+#: Comms paths for the sharded lookups: "psum" merges dequantized partials
+#: with one float psum; "a2a" ships the packed words through two all_to_alls
+#: (+ an integer spill psum) and dequantizes on the requesting shard.
+LOOKUP_COMMS = ("psum", "a2a")
+
+
+class BucketPlan(NamedTuple):
+    """Static-shape routing plan for the capacity-bucketed all-to-all.
+
+    ``slot``/``in_bucket``/``spilled`` share ``owner``'s shape, with the
+    second-to-last axis enumerating the ids of one batch slice: ``slot`` is
+    the flat position in the (n_shards × capacity) send buffer
+    (``owner * capacity + rank`` within the (slice, owner) bucket);
+    ``in_bucket`` marks ids that fit under the capacity; ``spilled`` marks
+    valid ids that overflowed — the lookup merges those through the integer
+    psum spill path instead of dropping them. ``counts`` replaces the id
+    axis with an ``n_shards`` axis: the total per-bucket demand (occupancy
+    is ``min(counts, capacity)``). The plan is a pure function of
+    ``(owner, valid)``, so every device derives the identical plan from
+    replicated inputs — that determinism is what lets the spill psum write
+    each overflow row from exactly one owner."""
+    slot: jnp.ndarray
+    in_bucket: jnp.ndarray
+    spilled: jnp.ndarray
+    counts: jnp.ndarray
+
+
+def plan_buckets(owner, valid, *, n_shards: int, capacity: int) -> BucketPlan:
+    """Plan per-destination-shard buckets under a static ``capacity``.
+
+    ``owner[..., j]`` is the shard that holds id j's row; ``valid`` masks
+    the ids that participate (batch padding and zero-width/cold ids don't).
+    Rank within a bucket is the id's order of appearance in its slice, so
+    the plan — and therefore which ids spill — is deterministic."""
+    owner = jnp.asarray(owner, jnp.int32)
+    valid = jnp.asarray(valid, bool)
+    oc = jnp.clip(owner, 0, n_shards - 1)
+    onehot = (oc[..., None] == jnp.arange(n_shards, dtype=jnp.int32)) \
+        & valid[..., None]
+    cum = jnp.cumsum(onehot.astype(jnp.int32), axis=-2)
+    rank = jnp.take_along_axis(cum, oc[..., None], axis=-1)[..., 0] - 1
+    in_bucket = valid & (rank < capacity)
+    return BucketPlan(slot=(oc * capacity + rank).astype(jnp.int32),
+                      in_bucket=in_bucket,
+                      spilled=valid & ~in_bucket,
+                      counts=onehot.sum(axis=-2).astype(jnp.int32))
+
+
+def spill_capacity(slice_len: int, capacity: int, n_shards: int) -> int:
+    """Static row count of the overflow spill buffer.
+
+    One slice of ``slice_len`` ids spills at most ``slice_len - capacity``:
+    summing ``max(0, count_o - capacity)`` over the owners with overflow
+    gives ``sum(count_o) - |overflowing| * capacity <= slice_len -
+    capacity``. ``n_shards`` slices therefore always fit."""
+    return n_shards * max(0, slice_len - capacity)
+
+
+def _cap_slice(batch: int, n_shards: int, capacity) -> tuple[int, int]:
+    """(slice_len, clamped capacity): each of the ``n_shards`` batch slices
+    holds ``ceil(batch / n_shards)`` ids; a capacity of None (or anything
+    >= slice_len) makes the plan statically spill-free."""
+    slice_len = -(-batch // n_shards)
+    if capacity is None:
+        return slice_len, slice_len
+    return slice_len, max(1, min(int(capacity), slice_len))
+
+
+def _route_words(subs, widths, widx, lidx, shard, n_words, mask=None):
+    """Packed words of the locally-owned rows among ``(widx, lidx)``,
+    zero-padded to ``n_words`` columns → (words, owned). Positions this
+    shard doesn't own (or ``mask`` excludes) stay zero."""
+    n = widx.shape[0]
+    words = jnp.zeros((n, n_words), jnp.uint32)
+    owned = jnp.zeros((n,), bool)
+    for i, b in widths:
+        sub = subs[f"b{b}"]
+        rows_loc = sub.shape[0]
+        loc = lidx - shard * rows_loc
+        own = (widx == i) & (loc >= 0) & (loc < rows_loc)
+        if mask is not None:
+            own = own & mask
+        w = jnp.take(sub, jnp.clip(loc, 0, rows_loc - 1), axis=0)
+        w = jnp.pad(w, ((0, 0), (0, n_words - w.shape[1])))
+        words = jnp.where(own[:, None], w, words)
+        owned = owned | own
+    return words, owned
+
+
+def _a2a_lookup(subs, local_idx, width_idx, alpha, beta, fl, *, mesh, rows_ax,
+                bits, d, capacity, use_kernel, interpret, ok_vec=None):
+    """Body of the capacity-bucketed all-to-all lookup (inside shard_map).
+
+    The ids are replicated along ``rows_ax`` (they enter sharded over the
+    batch axes only), so shard s takes ownership of batch slice s and every
+    device computes the identical replicated ``plan_buckets`` plan. Steps:
+
+      1. all_to_all the bucketed ids (static shape (n_shards, capacity));
+      2. the owner gathers the packed uint32 words of its rows;
+      3. all_to_all the words back; the requester collects its slice and an
+         ``all_gather`` rebuilds the full (batch, words) array;
+      4. overflowed ids merge through ONE masked integer psum of a static
+         ``spill_capacity``-row buffer — exact (each row has one writer);
+      5. the requesting shard unpacks + dequantizes through the sanctioned
+         ``core.quantizer.dequantize_codes`` path (or the fused kernel).
+
+    Identical words → identical static-shift unpack → identical dequant, so
+    the result is bit-exact vs the psum path at ANY capacity. ``ok_vec`` is
+    an optional replicated per-id validity vector (the tiered hot bit):
+    unselected ids are not routed and output zeros, matching the psum
+    path's ownership mask."""
+    mp = _axes_size(mesh, rows_ax)
+    batch = fl.shape[0]
+    slice_len, cap = _cap_slice(batch, mp, capacity)
+    bp = mp * slice_len
+    n_spill = spill_capacity(slice_len, cap, mp)
+    widths = [(i, b) for i, b in enumerate(bits) if b != 0]
+    n_words = max(packing.words_per_row(d, b) for _, b in widths)
+
+    fl_p = jnp.pad(fl, (0, bp - batch))
+    widx = jnp.take(width_idx, fl_p, axis=0)
+    lidx = jnp.take(local_idx, fl_p, axis=0)
+    nz = jnp.asarray([b != 0 for b in bits])
+    route = (jnp.arange(bp) < batch) & jnp.take(nz, widx, axis=0)
+    if ok_vec is not None:
+        route = route & jnp.take(ok_vec, fl_p, axis=0)
+    rows_loc_vec = jnp.asarray(
+        [subs[f"b{b}"].shape[0] if b else 1 for b in bits], jnp.int32)
+    owner = jnp.clip(lidx // jnp.take(rows_loc_vec, widx, axis=0), 0, mp - 1)
+    plan = plan_buckets(owner.reshape(mp, slice_len),
+                        route.reshape(mp, slice_len),
+                        n_shards=mp, capacity=cap)
+
+    me = rows_shard_index(mesh, rows_ax)
+    ids_me = jax.lax.dynamic_slice_in_dim(fl_p, me * slice_len, slice_len)
+    slot_me = jnp.take(plan.slot, me, axis=0)
+    inb_me = jnp.take(plan.in_bucket, me, axis=0)
+
+    # (1) ship the bucketed ids; pad slots carry id 0 and are never read
+    send = jnp.zeros((mp * cap,), fl_p.dtype).at[
+        jnp.where(inb_me, slot_me, mp * cap)].set(ids_me, mode="drop")
+    recv = jax.lax.all_to_all(send.reshape(mp, cap), rows_ax, 0, 0)
+
+    # (2) owner-local gather of the packed words
+    r_flat = recv.reshape(-1)
+    words, _ = _route_words(subs, widths, jnp.take(width_idx, r_flat, axis=0),
+                            jnp.take(local_idx, r_flat, axis=0), me, n_words)
+
+    # (3) words travel back; collect my slice, share all slices
+    ret = jax.lax.all_to_all(words.reshape(mp, cap, n_words), rows_ax, 0, 0)
+    ret = ret.reshape(mp * cap, n_words)
+    w_me = jnp.where(
+        inb_me[:, None],
+        jnp.take(ret, jnp.clip(slot_me, 0, mp * cap - 1), axis=0),
+        jnp.zeros((), jnp.uint32))
+    full = jax.lax.all_gather(w_me, rows_ax, axis=0, tiled=True)
+
+    # (4) deterministic overflow spill: masked integer psum, exact
+    if n_spill > 0:
+        sp = plan.spilled.reshape(bp)
+        sp_rank = jnp.cumsum(sp.astype(jnp.int32)) - 1
+        contrib, owned = _route_words(subs, widths, widx, lidx, me, n_words,
+                                      mask=sp)
+        buf = jnp.zeros((n_spill, n_words), jnp.uint32).at[
+            jnp.where(owned, sp_rank, n_spill)].set(contrib, mode="drop")
+        buf = jax.lax.psum(buf, rows_ax)
+        full = jnp.where(
+            sp[:, None],
+            jnp.take(buf, jnp.clip(sp_rank, 0, n_spill - 1), axis=0), full)
+
+    # (5) dequant on the requesting shard (PF102-sanctioned path)
+    out = jnp.zeros((bp, d), jnp.float32)
+    for i, b in widths:
+        wb = packing.words_per_row(d, b)
+        deq = _bucket_dequant(full[:, :wb], jnp.arange(bp), alpha[i], beta,
+                              b=b, d=d, use_kernel=use_kernel,
+                              interpret=interpret)
+        out = jnp.where((route & (widx == i))[:, None], deq, out)
+    return out[:batch]
+
+
+def lookup_route_stats(table, meta, ids, *, n_shards: int,
+                       bucket_capacity: int | None = None) -> dict:
+    """Deterministic routing counters for the a2a path of one lookup.
+
+    Mirrors the in-body plan exactly — same batch padding, owner derivation
+    (over ``pad_rows_to_shard``-ed subtables) and capacity clamp — so the
+    numbers are reproducible bench-gate metrics, not samples."""
+    bits, d = meta["bits"], meta["d"]
+    flat = jnp.asarray(ids).reshape(-1)
+    batch = flat.shape[0]
+    slice_len, cap = _cap_slice(batch, n_shards, bucket_capacity)
+    bp = n_shards * slice_len
+    rows_loc = []
+    for b in bits:
+        if b == 0:
+            rows_loc.append(1)
+            continue
+        rows = table["subtables"][f"b{b}"].shape[0]
+        rows_loc.append((rows + (-rows) % n_shards) // n_shards)
+    fl_p = jnp.pad(flat, (0, bp - batch))
+    widx = jnp.take(table["width_idx"], fl_p, axis=0)
+    lidx = jnp.take(table["local_idx"], fl_p, axis=0)
+    nz = jnp.asarray([b != 0 for b in bits])
+    route = (jnp.arange(bp) < batch) & jnp.take(nz, widx, axis=0)
+    owner = jnp.clip(
+        lidx // jnp.take(jnp.asarray(rows_loc, jnp.int32), widx, axis=0),
+        0, n_shards - 1)
+    plan = plan_buckets(owner.reshape(n_shards, slice_len),
+                        route.reshape(n_shards, slice_len),
+                        n_shards=n_shards, capacity=cap)
+    n_slots = n_shards * n_shards * cap
+    return {
+        "slice_len": slice_len,
+        "capacity": cap,
+        "spill_cap": spill_capacity(slice_len, cap, n_shards),
+        "routed": int(route.sum()),
+        "bucketed": int(plan.in_bucket.sum()),
+        "spilled": int(plan.spilled.sum()),
+        "bucket_demand_max": int(plan.counts.max()),
+        "occupancy_pct": round(100.0 * int(plan.in_bucket.sum()) / n_slots,
+                               4),
+    }
+
+
+# ---------------------------------------------------------------------------
 # packed-table lookup (repro.kernels.mpe_lookup / core.inference)
 # ---------------------------------------------------------------------------
 
@@ -153,17 +408,26 @@ def _bucket_dequant(sub, loc, alpha_i, beta, *, b, d, use_kernel, interpret):
 
 def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
                           mesh=None, use_kernel: bool = False,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          lookup_comms: str = "psum",
+                          bucket_capacity: int | None = None):
     """``core.inference.packed_lookup`` under ``shard_map``: subtables
     row-sharded over ``rows_axes`` (layout: ``packed_table_pspecs``), ids
-    batch-sharded over the remaining axes, one ``psum`` over the row axes.
+    batch-sharded over the remaining axes. ``lookup_comms`` picks the merge:
+    ``"psum"`` (one float psum over the row axes) or ``"a2a"`` (the
+    capacity-bucketed all-to-all of ``_a2a_lookup`` — ``bucket_capacity``
+    ids per (slice, shard) bucket, overflow spilling to an integer psum).
+    Both are bit-exact vs the single-device reference; a2a falls back to
+    psum when the row axes resolve to a single shard.
 
     Degrades to the single-device lookup when no multi-device mesh is active
     (or none of ``rows_axes`` is on it). ``use_kernel`` runs the fused
-    Pallas kernel per bucket inside the body. Bit-exact against the jitted
-    single-device reference (see module docstring)."""
+    Pallas kernel per bucket inside the body."""
     from repro.core.inference import packed_lookup
 
+    if lookup_comms not in LOOKUP_COMMS:
+        raise ValueError(f"lookup_comms must be one of {LOOKUP_COMMS}, "
+                         f"got {lookup_comms!r}")
     mesh = active_mesh(mesh)
     if mesh is None:
         if use_kernel:
@@ -174,6 +438,7 @@ def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
     mp = _axes_size(mesh, rows_ax)
 
     bits, d = meta["bits"], meta["d"]
+    use_a2a = lookup_comms == "a2a" and mp > 1 and any(bits)
     dp = _dp_axes_of(mesh, rows_ax)
     flat = ids.reshape(-1)
     batch_ax = _batch_entry(mesh, flat.shape[0], dp)
@@ -182,6 +447,11 @@ def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
                                  for k, v in table["subtables"].items()})
 
     def body(subs, local_idx, width_idx, alpha, beta, fl):
+        if use_a2a:
+            return _a2a_lookup(subs, local_idx, width_idx, alpha, beta, fl,
+                               mesh=mesh, rows_ax=rows_ax, bits=bits, d=d,
+                               capacity=bucket_capacity,
+                               use_kernel=use_kernel, interpret=interpret)
         widx = jnp.take(width_idx, fl, axis=0)
         lidx = jnp.take(local_idx, fl, axis=0)
         base = rows_shard_index(mesh, rows_ax)
@@ -210,18 +480,26 @@ def sharded_packed_lookup(table, meta, ids, *, rows_axes=("model",),
 
 
 def sharded_tiered_hot_lookup(hot, bits, d: int, ids, *,
-                              rows_axes=("model",), mesh=None):
+                              rows_axes=("model",), mesh=None,
+                              lookup_comms: str = "psum",
+                              bucket_capacity: int | None = None):
     """``repro.cache.tiers.tiered_hot_lookup`` under ``shard_map``: hot
     subtables row-sharded per ``tiered_hot_pspecs``, zeros at cold positions
     (the caller merges the cold fill). Bit-exact like the packed lookup —
-    the ownership mask additionally requires the hot bit."""
+    the ownership mask additionally requires the hot bit. ``lookup_comms``
+    / ``bucket_capacity`` select the same two merge paths as
+    ``sharded_packed_lookup`` (under a2a, only hot ids are routed)."""
     from repro.cache.tiers import tiered_hot_lookup
 
+    if lookup_comms not in LOOKUP_COMMS:
+        raise ValueError(f"lookup_comms must be one of {LOOKUP_COMMS}, "
+                         f"got {lookup_comms!r}")
     mesh = active_mesh(mesh)
     if mesh is None:
         return tiered_hot_lookup(hot, bits, d, ids)
     rows_ax = _present_axes(mesh, rows_axes)
     mp = _axes_size(mesh, rows_ax)
+    use_a2a = lookup_comms == "a2a" and mp > 1 and any(bits)
 
     dp = _dp_axes_of(mesh, rows_ax)
     flat = ids.reshape(-1)
@@ -230,6 +508,11 @@ def sharded_tiered_hot_lookup(hot, bits, d: int, ids, *,
                                  for k, v in hot["subtables"].items()})
 
     def body(subs, tier_local, is_hot, width_idx, alpha, beta, fl):
+        if use_a2a:
+            return _a2a_lookup(subs, tier_local, width_idx, alpha, beta, fl,
+                               mesh=mesh, rows_ax=rows_ax, bits=bits, d=d,
+                               capacity=bucket_capacity, use_kernel=False,
+                               interpret=True, ok_vec=is_hot)
         widx = jnp.take(width_idx, fl, axis=0)
         lidx = jnp.take(tier_local, fl, axis=0)
         hot_bit = jnp.take(is_hot, fl, axis=0)
@@ -269,38 +552,86 @@ def sharded_embedding_bag(table, ids, mask, *, rows_axes=("model",),
     batch-sharded over the data axes; each device sums its owned slots with
     the fused kernel, one ``psum`` merges the partial bags.
 
+    Differentiable w.r.t. the table: a ``custom_vjp`` runs the backward in
+    its own shard_map — per-device ``segment_sum`` of the owned slot
+    cotangents into the local row block (the transpose of the ownership
+    mask), psum-merged over the batch axes only when the bags are actually
+    split — so ``sharded_value_and_grad`` and training loss functions no
+    longer fall back to the jnp bag. Table grads land row-shard-local.
+
     NOT bit-exact for >1 row shard: a bag whose slots land on different
-    shards has its sum reassociated by the psum (~1e-6 relative on fp32).
+    shards has its sum reassociated by the psum (~1e-6 relative on fp32,
+    pinned by tests/test_shard_a2a.py::test_embedding_bag_psum_tolerance).
     Exact when ``rows_axes`` resolve to a single shard (pure batch
     sharding)."""
     from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+    from repro.kernels.embedding_bag.ops import embedding_bag_kernel
     from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
     mesh = active_mesh(mesh)
     rows_ax = _present_axes(mesh, rows_axes) if mesh is not None else ()
     mp = _axes_size(mesh, rows_ax) if mesh is not None else 1
+    if mesh is None:
+        if use_kernel:  # the custom_vjp wrapper: same kernel, differentiable
+            return embedding_bag_kernel(table, ids, mask, interpret)
+        return embedding_bag_ref(table, ids, mask)
     local = (embedding_bag_pallas if use_kernel else embedding_bag_ref)
     kw = {"interpret": interpret} if use_kernel else {}
-    if mesh is None:
-        return local(table, ids, mask, **kw)
 
     dp = _dp_axes_of(mesh, rows_ax)
     batch_ax = _batch_entry(mesh, ids.shape[0], dp)
+    bsplit = batch_ax is not None and _axes_size(mesh, batch_ax) > 1
     tab = pad_rows_to_shard(table, mp) if mp > 1 else table
+    rows_entry = rows_ax if mp > 1 else None
+    d_model = table.shape[1]
 
-    def body(tab_loc, ids_b, mask_b):
+    def fwd_body(tab_loc, ids_b, mask_b):
         rows_loc = tab_loc.shape[0]
-        base = rows_shard_index(mesh, rows_ax) * rows_loc
+        base = rows_shard_index(mesh, rows_ax) * rows_loc if mp > 1 else 0
         own = (ids_b >= base) & (ids_b < base + rows_loc)
         loc = jnp.clip(ids_b - base, 0, rows_loc - 1)
         part = local(tab_loc, loc, mask_b & own, **kw)
         return jax.lax.psum(part, rows_ax) if mp > 1 else part
 
-    in_specs = (P(rows_ax if mp > 1 else None, None),
-                P(batch_ax, None), P(batch_ax, None))
-    return shard_map(body, mesh, in_specs=in_specs,
-                     out_specs=P(batch_ax, None), check_rep=False)(
-        tab, ids.astype(jnp.int32), mask.astype(bool))
+    run_fwd = shard_map(
+        fwd_body, mesh,
+        in_specs=(P(rows_entry, None), P(batch_ax, None), P(batch_ax, None)),
+        out_specs=P(batch_ax, None), check_rep=False)
+
+    def bwd_body(g_loc, ids_b, mask_b):
+        rows_loc = tab.shape[0] // mp
+        base = rows_shard_index(mesh, rows_ax) * rows_loc if mp > 1 else 0
+        own = mask_b & (ids_b >= base) & (ids_b < base + rows_loc)
+        loc = jnp.clip(ids_b - base, 0, rows_loc - 1)
+        contrib = jnp.where(
+            own[..., None],
+            jnp.broadcast_to(g_loc[:, None, :], (*ids_b.shape, d_model)),
+            0.0)
+        d_loc = jax.ops.segment_sum(contrib.reshape(-1, d_model),
+                                    loc.reshape(-1), num_segments=rows_loc)
+        if bsplit:  # replicated bags would double-count under a psum
+            d_loc = jax.lax.psum(d_loc, batch_ax)
+        return d_loc.astype(g_loc.dtype)
+
+    run_bwd = shard_map(
+        bwd_body, mesh,
+        in_specs=(P(batch_ax, None), P(batch_ax, None), P(batch_ax, None)),
+        out_specs=P(rows_entry, None), check_rep=False)
+
+    @jax.custom_vjp
+    def bag(tab_p, ids_b, mask_b):
+        return run_fwd(tab_p, ids_b, mask_b)
+
+    def bag_fwd(tab_p, ids_b, mask_b):
+        return run_fwd(tab_p, ids_b, mask_b), (ids_b, mask_b)
+
+    def bag_bwd(res, g):
+        return run_bwd(g, *res), None, None
+
+    bag.defvjp(bag_fwd, bag_bwd)
+    # the jnp.pad to the padded table is differentiated *outside* the
+    # custom_vjp, so grads slice back to the caller's row count
+    return bag(tab, ids.astype(jnp.int32), mask.astype(bool))
 
 
 # ---------------------------------------------------------------------------
@@ -315,7 +646,16 @@ def sharded_flash_attention(q, k, v, *, n_kv_heads: int | None = None,
     heads over ``head_axes`` — every (batch, head) pair computes wholly on
     one device, so there are no collectives and the result is bit-exact
     against the single-device kernel. GQA KV expansion happens *before* the
-    shard_map so the head sharding stays aligned."""
+    shard_map so the head sharding stays aligned.
+
+    Differentiable: a ``custom_vjp`` places the fused fwd-stats and
+    backward Pallas kernels in their own shard_maps, with the (o, lse)
+    residuals stored under the same batch/head sharding as the activations
+    — training through the sharded wrapper runs the flash backward kernel
+    per device instead of falling back to the jnp attention, and the grads
+    are bit-exact vs the single-device kernel's (still collective-free)."""
+    from repro.kernels.flash_attention.kernel import (
+        flash_attention_bwd, flash_attention_fwd_stats)
     from repro.kernels.flash_attention.ops import flash_attention_kernel
 
     del n_kv_heads  # derived from the shapes, as in the flat wrapper
@@ -333,14 +673,58 @@ def sharded_flash_attention(q, k, v, *, n_kv_heads: int | None = None,
     dp = _dp_axes_of(mesh, head_ax)
     batch_ax = _batch_entry(mesh, q.shape[0], dp)
     head_entry = _batch_entry(mesh, hq, head_ax)
-
-    def body(qb, kb, vb):
-        return flash_attention_kernel(qb, kb, vb, causal=causal, bq=bq, bk=bk,
-                                      interpret=interpret)
-
     spec = P(batch_ax, None, head_entry, None)
-    return shard_map(body, mesh, in_specs=(spec, spec, spec),
-                     out_specs=spec, check_rep=False)(q, k, v)
+    lse_spec = P(batch_ax, head_entry, None)
+    bq_, bk_ = min(bq, q.shape[1]), min(bk, q.shape[1])
+
+    def _flat(x):  # (b, s, h, hd) -> the kernels' (b*h, s, hd)
+        b, s, h, hd = x.shape
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, hd)
+
+    def _unflat(xf, b, s, h):
+        return jnp.moveaxis(xf.reshape(b, h, s, -1), 1, 2)
+
+    def fwd_body(qb, kb, vb):
+        return flash_attention_kernel(qb, kb, vb, causal=causal, bq=bq,
+                                      bk=bk, interpret=interpret)
+
+    def stats_body(qb, kb, vb):
+        b, s, h, _ = qb.shape
+        o, lse = flash_attention_fwd_stats(
+            _flat(qb), _flat(kb), _flat(vb), causal=causal, bq=bq_, bk=bk_,
+            interpret=interpret)
+        return _unflat(o, b, s, h), lse.reshape(b, h, s)
+
+    def bwd_body(qb, kb, vb, ob, lseb, dob):
+        b, s, h, _ = qb.shape
+        dq, dk, dv = flash_attention_bwd(
+            _flat(qb), _flat(kb), _flat(vb), _flat(ob),
+            lseb.reshape(b * h, s), _flat(dob), causal=causal, bq=bq_,
+            bk=bk_, interpret=interpret)
+        return (_unflat(dq, b, s, h), _unflat(dk, b, s, h),
+                _unflat(dv, b, s, h))
+
+    run_fwd = shard_map(fwd_body, mesh, in_specs=(spec,) * 3,
+                        out_specs=spec, check_rep=False)
+    run_stats = shard_map(stats_body, mesh, in_specs=(spec,) * 3,
+                          out_specs=(spec, lse_spec), check_rep=False)
+    run_bwd = shard_map(bwd_body, mesh,
+                        in_specs=(spec, spec, spec, spec, lse_spec, spec),
+                        out_specs=(spec, spec, spec), check_rep=False)
+
+    @jax.custom_vjp
+    def fa(qx, kx, vx):
+        return run_fwd(qx, kx, vx)
+
+    def fa_fwd(qx, kx, vx):
+        o, lse = run_stats(qx, kx, vx)
+        return o, (qx, kx, vx, o, lse)
+
+    def fa_bwd(res, do):
+        return run_bwd(*res, do)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa(q, k, v)
 
 
 # ---------------------------------------------------------------------------

@@ -44,13 +44,17 @@ MESH_AXES = frozenset(PROD_AXIS_SIZE)
 #: The axis *groups* a single pspec dim may combine, normalized to tuples in
 #: mesh order. ``("pod", "data")`` is the multi-pod batch dim;
 #: ``("data", "model")`` / ("pod","data","model") are the every-axis row
-#: splits of ``sharded_mixed_expectation``; singletons are the common case.
-#: A dim entry outside this family is out of contract (SC202) — e.g.
-#: ``("model", "data")`` (wrong order ⇒ wrong row-major shard index) or an
-#: ad-hoc axis pairing no wrapper produces.
+#: splits of ``sharded_mixed_expectation``; ``("pod", "model")`` is the
+#: cross-host table-row split of ``host_packed_table_pspecs`` (pod-major:
+#: host boundaries outermost, so a shard's neighbours along "model" stay
+#: host-local); singletons are the common case. A dim entry outside this
+#: family is out of contract (SC202) — e.g. ``("model", "data")`` (wrong
+#: order ⇒ wrong row-major shard index) or an ad-hoc axis pairing no
+#: wrapper produces.
 AXIS_GROUPS = frozenset({
     ("pod",), ("data",), ("model",),
-    ("pod", "data"), ("data", "model"), ("pod", "data", "model"),
+    ("pod", "data"), ("pod", "model"), ("data", "model"),
+    ("pod", "data", "model"),
 })
 
 #: name → builder for every pspec family below; ``repro.analysis`` resolves
@@ -302,6 +306,22 @@ def packed_table_pspecs(table_sds, *, rows_axes=("model",)):
         "alpha": P(None),
         "beta": P(None),
     }
+
+
+@_family
+def host_packed_table_pspecs(table_sds, *, rows_axes=("pod", "model")):
+    """Multi-host layout for a packed inference table: subtable rows shard
+    over ``("pod", "model")`` — the vocab split that fits on no single host.
+
+    The "pod" axis sits on host boundaries (``mesh.host_boundary_groups`` /
+    ``host_mesh(n_pod=...)``), so the row-major shard index of
+    ``rows_shard_index`` walks hosts outermost: one host owns a contiguous
+    row range and its "model"-axis neighbours are host-local, which keeps
+    the capacity-bucketed all-to-all's dense peer traffic on-host and only
+    the pod hop cross-host. Everything else matches
+    ``packed_table_pspecs``: the word dim never splits, the id→(bucket,
+    row) vectors and α/β replicate (every host resolves every id)."""
+    return packed_table_pspecs(table_sds, rows_axes=tuple(rows_axes))
 
 
 @_family

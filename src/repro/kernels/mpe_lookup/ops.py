@@ -13,16 +13,23 @@ from repro.kernels.mpe_lookup.kernel import packed_lookup_pallas
 
 def packed_lookup_kernel_sharded(table, meta, ids: jnp.ndarray, *,
                                  rows_axes=("model",), mesh=None,
-                                 interpret: bool = True) -> jnp.ndarray:
+                                 interpret: bool = True,
+                                 lookup_comms: str = "psum",
+                                 bucket_capacity: int | None = None
+                                 ) -> jnp.ndarray:
     """The fused lookup under ``shard_map``: subtables row-sharded over
     ``rows_axes`` of the active mesh, the per-bucket Pallas kernel gathering
-    device-locally, one psum merging buckets. Falls back to the single-device
-    kernel path when no multi-device mesh is active (see
-    ``repro.dist.shard``)."""
+    device-locally, one psum merging buckets — or, with
+    ``lookup_comms="a2a"``, the capacity-bucketed all-to-all id shuffle that
+    ships packed words instead of dequantized partials (bit-exact either
+    way). Falls back to the single-device kernel path when no multi-device
+    mesh is active (see ``repro.dist.shard``)."""
     from repro.dist.shard import sharded_packed_lookup
     return sharded_packed_lookup(table, meta, ids, rows_axes=rows_axes,
                                  mesh=mesh, use_kernel=True,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 lookup_comms=lookup_comms,
+                                 bucket_capacity=bucket_capacity)
 
 
 def packed_lookup_kernel(table, meta, ids: jnp.ndarray, *,

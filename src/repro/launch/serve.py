@@ -52,7 +52,7 @@ import numpy as np
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
 from repro.data.synthetic import CTRSpec, SyntheticCTR
-from repro.dist.mesh import parse_mesh_flag
+from repro.dist.mesh import init_distributed, parse_mesh_flag
 from repro.embeddings.table import FieldSpec
 from repro.models.dlrm import DLRMConfig
 from repro.serve import Engine
@@ -93,6 +93,8 @@ def train_packed_dlrm(*, field_vocabs=DEFAULT_VOCABS, train_steps: int = 120,
 def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
                  bulk_rows: int = 4096, lookup_split: bool = True,
                  store=None, mesh=None, shard_lookup: bool | None = None,
+                 lookup_comms: str = "psum",
+                 bucket_capacity: int | None = None,
                  queue_capacity: int = 1024, quotas=None,
                  shed_watermark: float = 1.0,
                  coalesce_window_ms: float = 0.0, clock=None) -> Engine:
@@ -103,7 +105,10 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
     served through ``engine.score_tiered``. A multi-device ``mesh`` compiles
     every cell against it; ``shard_lookup`` (default: on exactly when the
     mesh has >1 device) routes the packed/hot gathers through the
-    ``shard_map`` wrappers of ``repro.dist.shard``. ``quotas`` /
+    ``shard_map`` wrappers of ``repro.dist.shard``; ``lookup_comms="a2a"``
+    switches those wrappers to the capacity-bucketed all-to-all id shuffle
+    (``bucket_capacity`` bounds ids per destination shard, overflow spills
+    to the psum merge — bit-exact at any capacity). ``quotas`` /
     ``shed_watermark`` / ``coalesce_window_ms`` / ``clock`` pass through to
     the engine's multi-tenant admission and scheduling policy."""
     from repro.models.dlrm import DLRM
@@ -115,12 +120,14 @@ def build_engine(cfg, params, state, buffers, *, p99_rows: int = 512,
     engine.register_packed_model(
         "dlrm", DLRM, cfg, params, state, buffers,
         shapes={"serve_p99": p99_rows, "serve_bulk": bulk_rows},
-        lookup_split=lookup_split, shard_lookup=shard_lookup)
+        lookup_split=lookup_split, shard_lookup=shard_lookup,
+        lookup_comms=lookup_comms, bucket_capacity=bucket_capacity)
     if store is not None:
         engine.register_tiered_model(
             "dlrm", DLRM, cfg, params, state, buffers, store,
             shapes={"tiered_p99": p99_rows, "tiered_bulk": bulk_rows},
-            shard_lookup=shard_lookup)
+            shard_lookup=shard_lookup,
+            lookup_comms=lookup_comms, bucket_capacity=bucket_capacity)
     return engine
 
 
@@ -360,9 +367,30 @@ def main(argv=None):
                          "lookup runs under shard_map (repro.dist.shard). "
                          "Virtualize CPU devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--lookup-comms", choices=("psum", "a2a"), default="psum",
+                    help="model-axis comms for the sharded packed lookup: "
+                         "'psum' merges full dequantized partials (default), "
+                         "'a2a' all-to-alls the ids and ships back only the "
+                         "packed quantized words each shard owns "
+                         "(capacity-bucketed; bit-exact either way)")
+    ap.add_argument("--bucket-capacity", type=int, default=None,
+                    help="a2a ids per destination shard per batch slice "
+                         "(default: the full slice, i.e. no overflow); "
+                         "overflow ids spill deterministically to the psum "
+                         "merge")
+    ap.add_argument("--coordinator", default=None,
+                    help="multi-host: coordinator address host:port for "
+                         "jax.distributed.initialize (single-host runs "
+                         "leave this unset)")
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="multi-host: total process count")
+    ap.add_argument("--host-id", type=int, default=None,
+                    help="multi-host: this process's index in [0, num-hosts)")
     ap.add_argument("--json", default=None,
                     help="write the latency/compile summary to this path")
     args = ap.parse_args(argv)
+    init_distributed(coordinator=args.coordinator,
+                     num_processes=args.num_hosts, process_id=args.host_id)
     mesh = parse_mesh_flag(args.mesh)
     if mesh is not None:
         print(f"[serve] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
@@ -400,6 +428,8 @@ def main(argv=None):
     engine = build_engine(cfg, params, state, buffers,
                           p99_rows=args.p99_rows, bulk_rows=args.bulk_rows,
                           store=store, mesh=mesh,
+                          lookup_comms=args.lookup_comms,
+                          bucket_capacity=args.bucket_capacity,
                           queue_capacity=args.queue_capacity,
                           coalesce_window_ms=args.coalesce_window_ms)
     print(f"[serve] registered cells: "

@@ -19,11 +19,48 @@ from repro.configs import get_arch
 from repro.core.mpe import MPEConfig
 from repro.core.pipeline import run_mpe_pipeline
 from repro.data.synthetic import CTRSpec, SyntheticCTR
-from repro.dist.mesh import parse_mesh_flag
+from repro.dist.mesh import init_distributed, parse_mesh_flag
 from repro.models.dlrm import DLRMConfig
 from repro.train.loop import Trainer
 from repro.train.optimizer import adam
 from repro.zoo import dlrm_builder, wide_deep_builder
+
+
+def _check_packed_lookup(res, fields, mesh, *, lookup_comms, bucket_capacity,
+                         seed):
+    """Post-train packed-lookup parity check under the training mesh.
+
+    Runs the row-sharded lookup on the just-packed table through the
+    selected comms path and asserts it is bit-exact against the
+    single-device ``core.inference.packed_lookup`` reference, printing the
+    deterministic a2a routing counters — the quickest way to see, on a real
+    mesh, how the chosen ``--bucket-capacity`` routes this table's traffic.
+    """
+    import numpy as np
+
+    from repro.core.inference import packed_lookup
+    from repro.dist.shard import lookup_route_stats, sharded_packed_lookup
+
+    table, meta = res["packed_table"], res["packed_meta"]
+    rng = np.random.default_rng(seed)
+    ids = jax.numpy.asarray(rng.integers(0, meta["n"], size=(512,)),
+                            dtype=jax.numpy.int32)
+    want = np.asarray(packed_lookup(table, meta, ids))
+    got = np.asarray(sharded_packed_lookup(
+        table, meta, ids, mesh=mesh, lookup_comms=lookup_comms,
+        bucket_capacity=bucket_capacity))
+    exact = bool(np.array_equal(want, got))
+    line = f"[train] lookup check ({lookup_comms}): bit_exact={exact}"
+    if lookup_comms == "a2a":
+        stats = lookup_route_stats(table, meta, ids,
+                                   n_shards=mesh.shape["model"],
+                                   bucket_capacity=bucket_capacity)
+        line += (f" capacity={stats['capacity']} routed={stats['routed']} "
+                 f"bucketed={stats['bucketed']} spilled={stats['spilled']}")
+    print(line)
+    if not exact:
+        raise SystemExit("[train] sharded packed lookup diverged from the "
+                         "single-device reference")
 
 
 def main():
@@ -51,9 +88,27 @@ def main():
                          "with row-shard-local grad updates "
                          "(repro.dist.shard). Virtualize CPU devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--lookup-comms", choices=("psum", "a2a"), default="psum",
+                    help="model-axis comms path for the post-train packed "
+                         "lookup check under --mesh: 'psum' merges "
+                         "dequantized partials, 'a2a' shuffles ids and "
+                         "ships back packed words (repro.dist.shard; "
+                         "bit-exact either way, route stats printed)")
+    ap.add_argument("--bucket-capacity", type=int, default=None,
+                    help="a2a ids per destination shard per batch slice "
+                         "(default: full slice); overflow spills to psum")
+    ap.add_argument("--coordinator", default=None,
+                    help="multi-host: coordinator host:port for "
+                         "jax.distributed.initialize")
+    ap.add_argument("--num-hosts", type=int, default=None,
+                    help="multi-host: total process count")
+    ap.add_argument("--host-id", type=int, default=None,
+                    help="multi-host: this process's index in [0, num-hosts)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    init_distributed(coordinator=args.coordinator,
+                     num_processes=args.num_hosts, process_id=args.host_id)
     mesh = parse_mesh_flag(args.mesh)
     if mesh is not None:
         print(f"[train] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
@@ -91,6 +146,11 @@ def main():
             ckpt_dir=args.ckpt_dir, prefetch=args.prefetch, mesh=mesh)
         print(f"[train] MPE ratio={res['storage_ratio']:.4f} "
               f"avg_bits={res['avg_bits']:.2f} eval={res['eval']}")
+        if mesh is not None and mesh.shape.get("model", 1) > 1:
+            _check_packed_lookup(res, fields, mesh,
+                                 lookup_comms=args.lookup_comms,
+                                 bucket_capacity=args.bucket_capacity,
+                                 seed=args.seed)
         return
 
     comp_cfg = {"bits": 6} if args.compressor == "lsq" else \

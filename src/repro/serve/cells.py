@@ -95,7 +95,9 @@ def _sds(shape, dtype):
 
 
 def packed_score_step(model, cfg, *, top_k: int | None = None,
-                      shard_lookup: bool = False, rows_axes=("model",)):
+                      shard_lookup: bool = False, rows_axes=("model",),
+                      lookup_comms: str = "psum",
+                      bucket_capacity: int | None = None):
     """The packed-table scoring computation shared by the live engine and the
     dry-run serve cells: eval-mode forward over a packed embedding config,
     optionally topped with a candidate ``top_k``.
@@ -104,10 +106,13 @@ def packed_score_step(model, cfg, *, top_k: int | None = None,
     ``repro.dist.shard.sharded_packed_lookup`` — the fused lookup runs
     *inside* the partitioner as a ``shard_map`` over the mesh active at
     trace time (the ``CellCache`` compiles under the engine's mesh), with
-    subtables row-sharded over ``rows_axes`` and one psum merging buckets.
-    The post-lookup interaction net (``model.interact``) is identical to the
-    monolithic path, so scores match the unsharded cell. Degrades to the
-    plain forward when compiled without a multi-device mesh."""
+    subtables row-sharded over ``rows_axes``. ``lookup_comms`` picks the
+    merge collective — ``"psum"`` (dequantized partials) or ``"a2a"`` (the
+    capacity-bucketed all-to-all of the packed words, ``bucket_capacity``
+    ids per bucket) — both bit-exact, so scores match the unsharded cell
+    either way. The post-lookup interaction net (``model.interact``) is
+    identical to the monolithic path. Degrades to the plain forward when
+    compiled without a multi-device mesh."""
     if not shard_lookup:
         def serve_step(params, state, buffers, ids):
             logits, _, _ = model.apply(params, buffers, state, {"ids": ids},
@@ -123,7 +128,9 @@ def packed_score_step(model, cfg, *, top_k: int | None = None,
     def serve_step(params, state, buffers, ids):
         gids = ids + buffers["offsets"][None, :]
         emb = sharded_packed_lookup(params["embedding"], meta, gids,
-                                    rows_axes=rows_axes)
+                                    rows_axes=rows_axes,
+                                    lookup_comms=lookup_comms,
+                                    bucket_capacity=bucket_capacity)
         logits, _ = model.interact(params, state, emb, gids, cfg, train=False)
         if top_k is not None:
             return tuple(jax.lax.top_k(logits, top_k))
@@ -133,18 +140,24 @@ def packed_score_step(model, cfg, *, top_k: int | None = None,
 
 def packed_score_cell(model, cfg, params, state, buffers, *, batch: int,
                       arch: str, shape: str, dp=("data",),
-                      rows_axes=("model",),
-                      shard_lookup: bool = False) -> ServeCellDef:
+                      rows_axes=("model",), shard_lookup: bool = False,
+                      lookup_comms: str = "psum",
+                      bucket_capacity: int | None = None) -> ServeCellDef:
     """Batched CTR scoring from a packed table: ``ids (B, F) -> logits (B,)``.
 
     ``cfg`` must carry ``compressor="packed"`` with the table's comp_cfg;
     ``params["embedding"]`` is the packed table pytree. ``shard_lookup``
-    compiles the ``shard_map`` lookup path (see ``packed_score_step``)."""
+    compiles the ``shard_map`` lookup path and ``lookup_comms``/
+    ``bucket_capacity`` pick its merge collective (see
+    ``packed_score_step``); both enter the cell fingerprint, so a psum cell
+    and an a2a cell never share an executable."""
     n_fields = len(cfg.fields)
     return ServeCellDef(
         arch=arch, shape=shape, kind="score", batch=batch,
         step_fn=packed_score_step(model, cfg, shard_lookup=shard_lookup,
-                                  rows_axes=rows_axes),
+                                  rows_axes=rows_axes,
+                                  lookup_comms=lookup_comms,
+                                  bucket_capacity=bucket_capacity),
         bound=(params, state, buffers),
         bound_pspecs=(packed_serve_pspecs(params, rows_axes=rows_axes),
                       replicate_like(state), replicate_like(buffers)),
@@ -152,7 +165,8 @@ def packed_score_cell(model, cfg, params, state, buffers, *, batch: int,
         request_pspecs=(P(dp, None),),
         out_pspecs=P(dp),
         meta={"kind": "score", "batch": batch, "n_fields": n_fields,
-              "shard_lookup": shard_lookup},
+              "shard_lookup": shard_lookup, "lookup_comms": lookup_comms,
+              "bucket_capacity": bucket_capacity},
         static=cfg,
     )
 
@@ -214,7 +228,9 @@ def packed_lookup_cell(table, meta, offsets, *, batch: int, n_fields: int,
 def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
                       batch: int, arch: str, shape: str, dp=("data",),
                       rows_axes=("model",), row_keys=("wide", "fm_linear"),
-                      shard_lookup: bool = False) -> ServeCellDef:
+                      shard_lookup: bool = False,
+                      lookup_comms: str = "psum",
+                      bucket_capacity: int | None = None) -> ServeCellDef:
     """Batched CTR scoring from a **tiered** table: ``(ids (B, F), cold_fill
     (B, F, d)) -> logits (B,)``.
 
@@ -231,7 +247,9 @@ def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
     ``shard_lookup`` routes the hot-tier gather through
     ``repro.dist.shard.sharded_tiered_hot_lookup`` (``shard_map`` over the
     mesh active at compile time, hot subtables row-sharded per
-    ``tiered_hot_pspecs``) — scores still match the monolithic cell.
+    ``tiered_hot_pspecs``), with ``lookup_comms``/``bucket_capacity``
+    selecting the psum or capacity-bucketed a2a merge — scores still match
+    the monolithic cell either way.
     """
     n_fields = len(cfg.fields)
     d = int(meta["d"])
@@ -241,7 +259,9 @@ def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
 
         def hot_lookup(hot_tree, gids):
             return sharded_tiered_hot_lookup(hot_tree, bits, d, gids,
-                                             rows_axes=rows_axes)
+                                             rows_axes=rows_axes,
+                                             lookup_comms=lookup_comms,
+                                             bucket_capacity=bucket_capacity)
     else:
         hot_lookup = tiered_hot_lookup_fn(bits, d)
 
@@ -270,7 +290,8 @@ def tiered_score_cell(model, cfg, params, state, buffers, hot, meta, *,
         request_pspecs=(P(dp, None), P(dp, None, None)),
         out_pspecs=P(dp),
         meta={"kind": "tiered_score", "batch": batch, "n_fields": n_fields,
-              "shard_lookup": shard_lookup},
+              "shard_lookup": shard_lookup, "lookup_comms": lookup_comms,
+              "bucket_capacity": bucket_capacity},
         static=(cfg, bits, d),
     )
 

@@ -335,9 +335,12 @@ def test_registered_cells_introspection(corpus_engine):
     cells = corpus_engine.registered_cells()
     names = {reg.celldef.name for reg in cells.values()}
     # every cell kind is represented, lookup companions included
-    assert {"dlrm/serve_p99", "dlrm/serve_p99.lookup", "dlrm/serve_bulk",
-            "dlrm/serve_bulk.lookup", "dlrm/tiered_p99", "dlrm/tiered_bulk",
-            "lm-tiny/decode", "lm-cb/decode_cb"} == names
+    expected = {"dlrm/serve_p99", "dlrm/serve_p99.lookup", "dlrm/serve_bulk",
+                "dlrm/serve_bulk.lookup", "dlrm/tiered_p99",
+                "dlrm/tiered_bulk", "lm-tiny/decode", "lm-cb/decode_cb"}
+    if jax.device_count() >= 4:  # the a2a comms variants need a real mesh
+        expected |= {"dlrm/serve_p99_a2a", "dlrm/tiered_p99_a2a"}
+    assert expected == names
 
 
 def test_clean_corpus_no_findings(corpus_engine):
@@ -345,8 +348,15 @@ def test_clean_corpus_no_findings(corpus_engine):
     standard fleet, against the checked-in budgets, finds nothing."""
     from repro.analysis.runner import check_engine
     rep = check_engine(corpus_engine, budgets=load_budgets())
-    assert rep.n_cells == 8
+    assert rep.n_cells == (10 if jax.device_count() >= 4 else 8)
     assert [f.render() for f in rep.findings] == []
-    # every corpus cell has a budget line checked in
+    # every corpus cell has a budget line checked in; the a2a cells only
+    # compile on a >1-device model axis, so on a 1x1 session their budget
+    # lines are present but unexercised
     budgets = load_budgets()
-    assert set(rep.measured) == set(budgets)
+    assert set(rep.measured) <= set(budgets)
+    unmeasured = set(budgets) - set(rep.measured)
+    if jax.device_count() >= 4:
+        assert not unmeasured
+    else:
+        assert unmeasured <= {"dlrm/serve_p99_a2a@64", "dlrm/tiered_p99_a2a@64"}

@@ -330,6 +330,7 @@ def test_shard_suite_subprocess_fallback():
     proc = subprocess.run(
         [sys.executable, "-m", "pytest", "-q", "-m", "multidevice",
          "-p", "no:cacheprovider", os.path.join(here, "test_shard.py"),
+         os.path.join(here, "test_shard_a2a.py"),
          os.path.join(here, "test_dist.py")],
         env=subprocess_env_4dev(), capture_output=True, text=True,
         timeout=1800, cwd=os.path.join(here, os.pardir))
